@@ -1,0 +1,284 @@
+"""Paper-figure reproductions (one function per figure/table).
+
+All cost-model/simulator driven (no TPU); each prints CSV rows
+``name,us_per_call,derived`` that benchmarks/run.py aggregates.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import (CostModel, InstanceSpec, MXU_EFF, BW_EFF)
+from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.simulator import SimConfig, simulate
+from repro.hw import ADA6000, TPU_V5E
+from repro.serving.request import Request
+from repro.serving.trace import TraceConfig, controlled_load, generate
+
+LLAMA = get_config("llama3-8b")
+QWEN = get_config("qwen2.5-7b")
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    max_new_tokens=r.max_new_tokens) for r in reqs]
+
+
+# Fig. 1 — prefill throughput flattens with bs; decode keeps scaling -------
+def fig01_phase_throughput():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    for seqlen in (128, 1024):
+        tp_prev = 0.0
+        flat_bs = None
+        for bs in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+            t_pref = cm.prefill_latency(seqlen, bs)
+            thr_pref = bs * seqlen / t_pref
+            t_dec = cm.decode_solo(bs, seqlen, noisy=False)
+            thr_dec = bs / t_dec
+            _row(f"fig01.prefill.s{seqlen}.bs{bs}", t_pref * 1e6,
+                 f"tok_per_s={thr_pref:.0f}")
+            _row(f"fig01.decode.s{seqlen}.bs{bs}", t_dec * 1e6,
+                 f"tok_per_s={thr_dec:.0f}")
+            if flat_bs is None and tp_prev and thr_pref < tp_prev * 1.05:
+                flat_bs = bs
+            tp_prev = thr_pref
+        _row(f"fig01.summary.s{seqlen}", 0,
+             f"prefill_flattens_at_bs={flat_bs}")
+
+
+# Fig. 3 — decode batch size under the trace -------------------------------
+def fig03_trace_batchsize():
+    reqs = generate(TraceConfig(duration_s=120, mean_rps=6.0, seed=0))
+    res = simulate(LLAMA, LLAMA, _clone(reqs), SimConfig(mode="harli",
+                                                         seed=0))
+    bs = np.array([b for _, b in res.batch_timeline])
+    _row("fig03.decode_bs", 0,
+         f"mean={bs.mean():.1f}|p5={np.percentile(bs,5):.0f}"
+         f"|p95={np.percentile(bs,95):.0f}|max={bs.max()}")
+
+
+# Fig. 4 — decode-phase utilization (memory-bound, compute idle) -----------
+def fig04_decode_utilization():
+    for chip, name in ((ADA6000, "ada6000"), (TPU_V5E, "v5e")):
+        cm = CostModel(LLAMA, InstanceSpec(chip=chip, tp=1 if
+                                           chip is ADA6000 else 2),
+                       noise_sigma=0)
+        sms, bws = [], []
+        for bs in (1, 4, 16, 64):
+            for s in (128, 512, 1024):
+                sm, bw = cm.decode_utilization(bs, s)
+                sms.append(sm)
+                bws.append(bw)
+        _row(f"fig04.util.{name}", 0,
+             f"mean_bw_util={np.mean(bws):.2f}|mean_compute_util="
+             f"{np.mean(sms):.2f}")
+
+
+# Fig. 5 — co-location potential (fwd-only ft1 / bwd-only ft2) --------------
+def fig05_colocation_potential():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    qos = 0.040
+    u_avg = cm.avg_unit_work(2, 1024)
+    for ft_name, backward in (("ft1_fwd", False), ("ft2_bwd", True)):
+        best = 0.0
+        u_dir = cm.unit_work(2, 1024, backward)
+        # colocated_round schedules avg-units; convert to directional units
+        conv = u_avg.flops / u_dir.flops
+        for bs in (4, 16, 64):
+            for s in (128, 1024):
+                solo_u = cm.unit_solo(2, 1024, backward, noisy=False)
+                base_rate = 1.0 / solo_u          # units/s on a dedicated chip
+                # manually tune k to the QoS limit (paper §2.2.2 setup)
+                k_best, rate = 0, 0.0
+                for k in range(1, 20):
+                    t = cm.colocated_round(bs, s, k, 2, 1024, noisy=False)
+                    if t > qos:
+                        break
+                    k_best, rate = k, k * conv / t
+                # colocated instance also still serves; improvement counts
+                # harvested throughput relative to a dedicated ft chip
+                imp = rate / base_rate
+                best = max(best, imp)
+                _row(f"fig05.{ft_name}.bs{bs}.s{s}", 0,
+                     f"k={k_best}|harvested_frac={imp:.2f}")
+        _row(f"fig05.{ft_name}.best", 0, f"max_harvested_frac={best:.2f}")
+
+
+# Fig. 8 — solo decode latency vs (bs, seqlen) ------------------------------
+def fig08_solo_latency():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    for bs in (1, 4, 16, 64):
+        lat = [cm.decode_solo(bs, s, noisy=False) for s in
+               (64, 128, 256, 512)]
+        slope = (lat[-1] - lat[0]) / (512 - 64)
+        _row(f"fig08.bs{bs}", lat[-1] * 1e6,
+             f"lat_ms@512={lat[-1]*1e3:.2f}|linear_slope_us_per_tok="
+             f"{slope*1e6:.3f}")
+
+
+# Fig. 9 — solo latency vs quantum (sublinear scaling) ----------------------
+def fig09_quantum_scaling():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    for bs, s in ((4, 256), (16, 256), (64, 512)):
+        lats = {q: cm.decode_solo(bs, s, quantum=q / 10, noisy=False)
+                for q in range(1, 11)}
+        _row(f"fig09.bs{bs}.s{s}", lats[10] * 1e6,
+             f"lat@10%={lats[1]*1e3:.1f}ms|lat@50%={lats[5]*1e3:.1f}ms"
+             f"|lat@100%={lats[10]*1e3:.1f}ms")
+
+
+# Fig. 10 — colo latency vs finetune quantum (linear slopes) ----------------
+def fig10_colo_latency():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    for bs in (4, 16, 64):
+        lats = [cm.colocated_round(bs, 256, k, 2, 1024, noisy=False)
+                for k in range(1, 10)]
+        slopes = np.diff(lats)
+        _row(f"fig10.bs{bs}", lats[-1] * 1e6,
+             f"slope_ms_per_unit={np.mean(slopes)*1e3:.2f}"
+             f"|slope_cv={np.std(slopes)/max(np.mean(slopes),1e-12):.2f}")
+
+
+# Fig. 11 — headline: throughput + QoS across pairs and modes ---------------
+def fig11_throughput_qos(duration_s: float = 120.0):
+    pairs = [("llama3-8b", "llama3-8b"), ("llama3-8b", "qwen2.5-7b"),
+             ("qwen2.5-7b", "llama3-8b"), ("qwen2.5-7b", "qwen2.5-7b")]
+    base = generate(TraceConfig(duration_s=duration_s, mean_rps=6.0, seed=1))
+    gains_sep, gains_sta = [], []
+    for inf_name, ft_name in pairs:
+        cfg_i, cfg_f = get_config(inf_name), get_config(ft_name)
+        out = {}
+        for mode in ("separate", "static", "harli"):
+            t0 = time.time()
+            res = simulate(cfg_i, cfg_f, _clone(base),
+                           SimConfig(mode=mode, seed=2))
+            out[mode] = res
+            p99 = np.percentile(res.tpot, 99) * 1e3 if res.tpot else 0
+            _row(f"fig11.{inf_name[:5]}-{ft_name[:5]}.{mode}",
+                 (time.time() - t0) * 1e6,
+                 f"ft_tp={res.ft_throughput:.2f}|tpot_p99_ms={p99:.1f}"
+                 f"|qos_viol={res.qos_violation_frac*100:.2f}%"
+                 f"|done={res.completed}")
+        g_sep = out["harli"].ft_throughput / max(
+            out["separate"].ft_throughput, 1e-9) - 1
+        g_sta = out["harli"].ft_throughput / max(
+            out["static"].ft_throughput, 1e-9) - 1
+        gains_sep.append(g_sep)
+        gains_sta.append(g_sta)
+        _row(f"fig11.{inf_name[:5]}-{ft_name[:5]}.gain", 0,
+             f"vs_separate={g_sep*100:+.1f}%|vs_static={g_sta*100:+.1f}%")
+    _row("fig11.summary", 0,
+         f"avg_vs_separate={np.mean(gains_sep)*100:+.1f}%"
+         f"|max_vs_separate={np.max(gains_sep)*100:+.1f}%"
+         f"|avg_vs_static={np.mean(gains_sta)*100:+.1f}%"
+         f"|paper=+46.2%_avg_+92.0%_max")
+
+
+# Fig. 12 — predictor error distributions -----------------------------------
+def fig12_predictor_error():
+    for name, cfg in (("L", LLAMA), ("Q", QWEN)):
+        cm = CostModel(cfg, InstanceSpec(tp=2), seed=3)
+        pred = TwoStageLatencyPredictor(k_max=10)
+        rep = pred.fit_from_costmodel(cm)
+        _row(f"fig12.stage1-{name}", rep.solo_fit_s * 1e6,
+             f"mean_err={rep.solo_mean_err*100:.1f}%"
+             f"|max_err={rep.solo_max_err*100:.1f}%|paper<=6%")
+        _row(f"fig12.stage2-{name}{name}", rep.colo_fit_s * 1e6,
+             f"mean_err={rep.colo_mean_err*100:.1f}%"
+             f"|max_err={rep.colo_max_err*100:.1f}%|paper<=5%"
+             f"|eq3_form_under_fusion={rep.colo_paper_mean_err*100:.0f}%")
+
+
+# Fig. 13 — memory usage + window timeline (§8.5 controlled load) -----------
+def fig13_memory_timeline():
+    reqs = controlled_load(phases=((8, 20.0), (42, 20.0), (24, 20.0)))
+    res = simulate(LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=4))
+    tl = res.memory_timeline
+    if not tl:
+        _row("fig13.memory", 0, "no_timeline")
+        return
+    kv = np.array([s["kv_bytes"] for s in tl]) / 2 ** 30
+    win = np.array([s["window_bytes"] for s in tl]) / 2 ** 30
+    t = np.array([s["t"] for s in tl])
+    for lo, hi, tag in ((0, 20, "light"), (20, 40, "heavy"),
+                        (40, 70, "medium")):
+        m = (t >= lo) & (t < hi)
+        if m.any():
+            _row(f"fig13.phase.{tag}", 0,
+                 f"kv_gib={kv[m].mean():.2f}|window_gib={win[m].mean():.2f}")
+    corr = np.corrcoef(kv, win)[0, 1] if len(kv) > 3 else 0.0
+    _row("fig13.summary", 0,
+         f"kv_window_anticorrelation={corr:+.2f} (window yields to KV)")
+
+
+# Fig. 14 — scheduler quantum + latency timeline ----------------------------
+def fig14_scheduler_timeline():
+    reqs = controlled_load(phases=((8, 15.0), (42, 15.0), (24, 15.0)))
+    res = simulate(LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=5))
+    qt = [q for q in res.quantum_timeline if q[3] > 0]   # decode rounds only
+    ks = np.array([k for _, k, _, _ in qt])
+    lat = np.array([l for _, _, l, _ in qt])
+    preempt = float(np.mean(ks == 0))
+    _row("fig14.scheduler", 0,
+         f"mean_k={ks.mean():.1f}|preempt_frac={preempt:.2f}"
+         f"|mean_round_ms={lat.mean()*1e3:.1f}"
+         f"|p99_round_ms={np.percentile(lat,99)*1e3:.1f}")
+
+
+# §8.7 — Harli-TP (shared base weights) --------------------------------------
+def sec87_tp_mode(duration_s: float = 90.0):
+    # heavier prompts squeeze the unified pool so the non-shared window
+    # actually swaps (the regime §8.7 targets)
+    base = generate(TraceConfig(duration_s=duration_s, mean_rps=7.0,
+                                prompt_median=2048, seed=6))
+    res_plain = simulate(LLAMA, LLAMA, _clone(base),
+                         SimConfig(mode="harli", seed=7,
+                                   share_base_weights=False))
+    res_tp = simulate(LLAMA, LLAMA, _clone(base),
+                      SimConfig(mode="harli", seed=7,
+                                share_base_weights=True))
+    gain = res_tp.ft_throughput / max(res_plain.ft_throughput, 1e-9) - 1
+    _row("sec87.harli", 0, f"ft_tp={res_plain.ft_throughput:.2f}")
+    _row("sec87.harli_tp_shared", 0,
+         f"ft_tp={res_tp.ft_throughput:.2f}|gain={gain*100:+.1f}%"
+         f"|paper=+10.2%")
+
+
+# §8.8 — overheads ------------------------------------------------------------
+def sec88_overhead():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=8)
+    pred = TwoStageLatencyPredictor(k_max=10)
+    rep = pred.fit_from_costmodel(cm)
+    _row("sec88.fit", (rep.solo_fit_s + rep.colo_fit_s) * 1e6,
+         f"solo_samples={rep.solo_samples}|colo_samples={rep.colo_samples}")
+    _row("sec88.predict", pred.predict_latency_us(), "paper~5us")
+    # small-tensor pool fragmentation under a synthetic allocation storm
+    from repro.core.buddy import BuddyAllocator
+    rng = np.random.default_rng(0)
+    b = BuddyAllocator(256 * 1024 * 1024)
+    live = []
+    for _ in range(5000):
+        if live and rng.random() < 0.45:
+            b.freeb(live.pop(rng.integers(len(live))))
+        else:
+            off = b.alloc(int(rng.lognormal(10, 1.5)))
+            if off is not None:
+                live.append(off)
+    _row("sec88.fragmentation", 0,
+         f"frag_mb={b.fragmentation_bytes/2**20:.1f}|paper<100MB"
+         f"|peak_mb={b.peak_bytes/2**20:.1f}")
+
+
+ALL = [fig01_phase_throughput, fig03_trace_batchsize,
+       fig04_decode_utilization, fig05_colocation_potential,
+       fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
+       fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
+       fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead]

@@ -1,0 +1,111 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs  = per-device trip-corrected dot FLOPs x chips (launch/hlo_analysis)
+HLO_bytes  = per-device (args + outputs + 2*temps - aliases - CPU-upcast
+             artifacts) x chips — every resident input buffer is streamed at
+             least once per step, outputs written once, temps written+read.
+collective_bytes = trip-corrected sum of collective result sizes x chips.
+
+MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference);
+the ratio MODEL_FLOPS / HLO_FLOPs exposes replicated/redundant compute.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.hw import TPU_V5E
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results"
+
+
+def cell_roofline(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok") or rec.get("kind") == "colocated":
+        return None
+    chips = rec["chips"]
+    chip = TPU_V5E
+    m = rec["memory"]
+    upcast = m.get("cpu_bf16_upcast_bytes", 0)
+    temp_adj = max(m["temp_size_in_bytes"] - upcast,
+                   m.get("analytic_activation_bytes", 0))
+    hbm_bytes_dev = (m["argument_size_in_bytes"] + m["output_size_in_bytes"]
+                     - m["alias_size_in_bytes"] + 2 * temp_adj)
+    hbm_bytes = max(hbm_bytes_dev, 0) * chips
+    flops = rec["hlo"]["dot_flops"] * chips
+    coll = rec["hlo"]["collective_bytes"].get(
+        "total_tpu", rec["hlo"]["collective_bytes"]["total"]) * chips
+
+    t_comp = flops / (chips * chip.peak_flops_bf16)
+    t_mem = hbm_bytes / (chips * chip.hbm_bw)
+    t_coll = coll / (chips * chip.ici_bw_per_link)
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    model_flops = rec.get("model_flops", 0.0)
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful work per achievable second at the binding
+    # resource (1.0 = the step could not be faster on this hardware)
+    useful_t = model_flops / (chips * chip.peak_flops_bf16)
+    frac = useful_t / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom[1],
+        "hlo_flops": flops, "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "roofline_frac": frac,
+        "resident_gib": m.get("resident_tpu_bytes", 0) / 2 ** 30,
+    }
+
+
+def load_all(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = cell_roofline(json.loads(f.read_text()))
+        if r:
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'dominant':>10s} {'useful':>7s} "
+           f"{'roofl%':>7s} {'res GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+            f"{r['collective_s']*1e3:9.2f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.2f} {r['roofline_frac']*100:6.1f}% "
+            f"{r['resident_gib']:8.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = load_all(mesh)
+    if not rows:
+        print("no dry-run results found — run launch/dryrun.py first")
+        return
+    print(fmt_table(rows))
+    print()
+    # CSV for run.py
+    for r in rows:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline,{r['arch']}__{r['shape']}__{mesh},"
+              f"{bound*1e6:.1f},{r['dominant']}|frac={r['roofline_frac']:.3f}"
+              f"|useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

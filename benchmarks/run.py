@@ -1,0 +1,70 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: paper-figure reproductions + roofline extraction.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11] [--quick]
+
+Figures run against the TPU v5e cost model / discrete-event simulator
+(DESIGN.md §2: the container's stand-in for hardware profiling); the
+roofline section reads the dry-run artifacts in dryrun_results/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="substring filter on figure function names")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter traces for the simulator figures")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures as F
+    from benchmarks import roofline as R
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    for fn in F.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            if args.quick and fn.__name__ == "fig11_throughput_qos":
+                fn(duration_s=45.0)
+            elif args.quick and fn.__name__ == "sec87_tp_mode":
+                fn(duration_s=45.0)
+            else:
+                fn()
+            print(f"# {fn.__name__}: {time.time()-t0:.1f}s")
+        except Exception as e:
+            print(f"# {fn.__name__} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+    if not args.only or "roofline" in args.only:
+        try:
+            rows = R.load_all("single")
+            if rows:
+                print()
+                print("# Roofline (single-pod; see EXPERIMENTS.md §Roofline)")
+                print(R.fmt_table(rows))
+                for r in rows:
+                    bound = max(r["compute_s"], r["memory_s"],
+                                r["collective_s"])
+                    print(f"roofline,{r['arch']}__{r['shape']},"
+                          f"{bound*1e6:.1f},"
+                          f"{r['dominant']}|frac={r['roofline_frac']:.3f}"
+                          f"|useful={r['useful_ratio']:.3f}")
+            else:
+                print("# roofline: no dryrun_results found (run "
+                      "repro.launch.dryrun first)")
+        except Exception as e:
+            print(f"# roofline FAILED: {type(e).__name__}: {e}")
+    print(f"# total: {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Harli end-to-end on real compute: a decode instance serving requests
+while PEFT layer-units run inside the SAME fused XLA programs, quantum
+chosen per round by the QoS scheduler.
+
+    PYTHONPATH=src python examples/colocate_serve.py \
+        [--arch llama3-8b] [--ft-arch qwen2.5-7b] [--requests 10]
+
+(Thin wrapper over repro.launch.serve --smoke --colocate.)
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    if "--colocate" not in argv:
+        argv.append("--colocate")
+    sys.argv = [sys.argv[0]] + argv
+    main()

@@ -1,0 +1,22 @@
+"""LoRA finetuning driver with checkpoint/restart fault tolerance:
+trains a (reduced) model for a few hundred steps, checkpointing
+asynchronously; re-run with --resume after killing it to continue.
+
+    PYTHONPATH=src python examples/finetune_lora.py \
+        [--arch recurrentgemma-2b] [--steps 30] [--layer-units]
+
+(Thin wrapper over repro.launch.train --smoke.)
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    if not any(a.startswith("--ckpt-dir") for a in argv):
+        argv += ["--ckpt-dir", "/tmp/repro_ckpt"]
+    sys.argv = [sys.argv[0]] + argv
+    main()

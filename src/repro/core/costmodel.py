@@ -1,0 +1,198 @@
+"""Roofline cost simulator — the measurement source for the latency predictor.
+
+The container has no TPU, so this model plays the role the paper's ncu/wall
+-clock profiling plays: it produces decode/prefill/finetune-unit latencies
+from first principles (TPU v5e roofline + the paper's Eq. 4–5 bandwidth
+-contention law) plus measurement noise. The two-stage predictor is *fit on
+its samples* exactly as it would be fit on real profiles (§5, §8.8), and the
+discrete-event simulator replays traces against it.
+
+Key TPU adaptation (DESIGN.md §2): the paper's SM ratio becomes the finetune
+*quantum* q_ft = k/k_max (k layer-units fused into one decode round). Round
+latency under co-location follows the fused-program roofline
+    T_round = max( (bytes_d + Σbytes_u) / BW_eff ,
+                   (flops_d + Σflops_u) / peak_eff ) + overheads
+which is linear in k in either regime — the same linearity the paper
+establishes empirically (Fig. 10) and theoretically (Eq. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.hw import TPU_V5E, ChipSpec
+from repro.models.config import ModelConfig
+
+# Achievable-fraction constants (standard TPU engineering numbers: MXU
+# efficiency on decode-shaped GEMMs, DMA streaming efficiency, and how much
+# of the fused program's compute XLA actually hides under DMA).
+MXU_EFF = 0.55            # effective fraction of peak FLOP/s
+BW_EFF = 0.85             # effective fraction of HBM bandwidth (paper Fig. 4)
+OVERLAP_EFF = 0.72        # fused-program compute/DMA overlap efficiency
+STEP_OVERHEAD_S = 120e-6  # per-round dispatch/launch overhead
+PER_LAYER_OVERHEAD_S = 2.2e-6
+UNIT_OVERHEAD_S = 25e-6   # per finetune-unit dispatch overhead
+BW_SAT_QUANTUM = 0.45     # share of chip needed to saturate HBM BW (Fig. 9)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSpec:
+    """A serving/finetune deployment unit: a TP group of `tp` chips."""
+    chip: ChipSpec = TPU_V5E
+    tp: int = 8
+
+    @property
+    def peak_flops(self) -> float:
+        return self.chip.peak_flops_bf16 * self.tp * MXU_EFF
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.chip.hbm_bw * self.tp * BW_EFF
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.chip.hbm_bytes * self.tp
+
+    @property
+    def host_dma_bw(self) -> float:
+        return self.chip.host_dma_bw * self.tp
+
+
+@dataclasses.dataclass
+class DecodeWork:
+    """Bytes/FLOPs of one decode round."""
+    bytes_hbm: float
+    flops: float
+    ici_s: float          # TP collective time per round
+
+
+@dataclasses.dataclass
+class UnitWork:
+    """Bytes/FLOPs of one finetune layer-unit (fwd or bwd avg)."""
+    bytes_hbm: float
+    flops: float
+    layer_weight_bytes: float   # for window swap timing
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, inst: InstanceSpec = InstanceSpec(),
+                 noise_sigma: float = 0.015, seed: int = 0):
+        self.cfg = cfg
+        self.inst = inst
+        self.noise_sigma = noise_sigma
+        self.rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------- workloads ----
+    def decode_work(self, bs: int, mean_ctx: float) -> DecodeWork:
+        cfg = self.cfg
+        active = cfg.active_param_count()
+        w_bytes = active * 2.0                           # bf16 weight stream
+        ctx_eff = cfg.effective_cache_len(int(mean_ctx))
+        kv_bytes = bs * ctx_eff * cfg.cache_bytes_per_token() \
+            + bs * cfg.state_bytes()
+        flops = 2.0 * active * bs \
+            + 4.0 * bs * ctx_eff * len(cfg.attn_layer_indices()) \
+            * cfg.num_kv_heads * cfg.head_dim * max(cfg.q_per_kv, 1)
+        # TP all-reduce of (bs, d) per layer, 2x, ring over tp chips
+        ar_bytes = 2 * cfg.num_layers * bs * cfg.d_model * 2.0
+        link = self.inst.chip.ici_bw_per_link * max(self.inst.tp, 1)
+        ici_s = 0.0 if (self.inst.tp <= 1 or link <= 0) else \
+            2 * (self.inst.tp - 1) / self.inst.tp * ar_bytes / link
+        return DecodeWork(bytes_hbm=w_bytes + kv_bytes, flops=flops,
+                          ici_s=ici_s)
+
+    def prefill_latency(self, prompt_len: int, bs: int = 1) -> float:
+        cfg = self.cfg
+        active = cfg.active_param_count()
+        flops = 2.0 * active * prompt_len * bs \
+            + 4.0 * prompt_len * cfg.effective_cache_len(prompt_len) / 2 \
+            * len(cfg.attn_layer_indices()) * cfg.num_heads * cfg.head_dim * bs
+        bytes_hbm = active * 2.0 + bs * prompt_len * cfg.d_model * 2 * 8
+        return max(flops / self.inst.peak_flops,
+                   bytes_hbm / self.inst.hbm_bw) + STEP_OVERHEAD_S
+
+    def unit_work(self, micro_batch: int, seq_len: int,
+                  backward: bool = False) -> UnitWork:
+        """One layer fwd (bwd ≈ 2x flops: recompute + grads)."""
+        cfg = self.cfg
+        per_layer_params = cfg.active_param_count() / max(cfg.num_layers, 1)
+        tokens = micro_batch * seq_len
+        f = 2.0 * per_layer_params * tokens
+        if backward:
+            f *= 3.0   # recompute fwd + dx + dW(adapters)
+        w_bytes = per_layer_params * 2.0
+        act_bytes = 4 * tokens * cfg.d_model * 2.0
+        return UnitWork(bytes_hbm=w_bytes + act_bytes, flops=f,
+                        layer_weight_bytes=w_bytes)
+
+    def avg_unit_work(self, micro_batch: int, seq_len: int) -> UnitWork:
+        f = self.unit_work(micro_batch, seq_len, backward=False)
+        b = self.unit_work(micro_batch, seq_len, backward=True)
+        return UnitWork(bytes_hbm=(f.bytes_hbm + b.bytes_hbm) / 2,
+                        flops=(f.flops + b.flops) / 2,
+                        layer_weight_bytes=f.layer_weight_bytes)
+
+    # -------------------------------------------------------- latencies ---
+    def _noise(self) -> float:
+        if self.noise_sigma <= 0:
+            return 1.0
+        return float(np.exp(self.rng.normal(0.0, self.noise_sigma)))
+
+    def decode_solo(self, bs: int, mean_ctx: float, quantum: float = 1.0,
+                    noisy: bool = True) -> float:
+        """Decode-round latency with fraction `quantum` of the instance
+        (paper Fig. 9: sublinear in the compute share, because decode is
+        memory-bound and BW saturates below full allocation)."""
+        w = self.decode_work(bs, mean_ctx)
+        q = max(quantum, 1e-3)
+        bw = self.inst.hbm_bw * min(1.0, q / BW_SAT_QUANTUM)
+        t = max(w.bytes_hbm / bw, w.flops / (self.inst.peak_flops * q))
+        t += w.ici_s + STEP_OVERHEAD_S \
+            + self.cfg.num_layers * PER_LAYER_OVERHEAD_S
+        return t * (self._noise() if noisy else 1.0)
+
+    def colocated_round(self, bs: int, mean_ctx: float, k_units: int,
+                        micro_batch: int, seq_len: int,
+                        unit_weights_resident: bool = True,
+                        noisy: bool = True) -> float:
+        """Fused decode + k finetune-unit round latency (Eq. 5 analogue)."""
+        d = self.decode_work(bs, mean_ctx)
+        u = self.avg_unit_work(micro_batch, seq_len)
+        u_bytes = u.bytes_hbm if unit_weights_resident \
+            else u.bytes_hbm  # window streaming is on the host-DMA channel
+        total_bytes = d.bytes_hbm + k_units * u_bytes
+        total_flops = d.flops + k_units * u.flops
+        t_mem = total_bytes / self.inst.hbm_bw
+        t_comp = total_flops / self.inst.peak_flops
+        # imperfect overlap: the fused program hides the smaller term only
+        # partially under the larger one
+        t = max(t_mem, t_comp) + (1.0 - OVERLAP_EFF) * min(t_mem, t_comp)
+        t += d.ici_s + STEP_OVERHEAD_S \
+            + self.cfg.num_layers * PER_LAYER_OVERHEAD_S \
+            + k_units * UNIT_OVERHEAD_S
+        return t * (self._noise() if noisy else 1.0)
+
+    def unit_solo(self, micro_batch: int, seq_len: int,
+                  backward: bool = False, noisy: bool = True) -> float:
+        u = self.unit_work(micro_batch, seq_len, backward)
+        t = max(u.bytes_hbm / self.inst.hbm_bw,
+                u.flops / self.inst.peak_flops) + UNIT_OVERHEAD_S
+        return t * (self._noise() if noisy else 1.0)
+
+    def layer_swap_time(self, micro_batch: int, seq_len: int) -> float:
+        """Host->HBM streaming of one layer's frozen weights (window swap)."""
+        u = self.unit_work(micro_batch, seq_len)
+        return u.layer_weight_bytes / self.inst.host_dma_bw
+
+    # --------------------------------------------------------- utilization
+    def decode_utilization(self, bs: int, mean_ctx: float):
+        """(sm_util, bw_util) of a solo decode round — paper Fig. 4."""
+        w = self.decode_work(bs, mean_ctx)
+        t = self.decode_solo(bs, mean_ctx, noisy=False)
+        bw_util = w.bytes_hbm / (t * self.inst.chip.hbm_bw * self.inst.tp)
+        sm_util = w.flops / (t * self.inst.chip.peak_flops_bf16 * self.inst.tp)
+        return sm_util, bw_util

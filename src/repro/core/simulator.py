@@ -1,0 +1,449 @@
+"""Discrete-event co-location simulator (paper-scale experiments, Figs 11-14).
+
+Replays a request trace against the roofline cost model on a modeled TPU v5e
+deployment: one prefill instance + N decode instances (TP groups), each
+optionally co-locating a PEFT finetune job through the unified allocator,
+two-stage predictor and QoS scheduler — the same classes the real engine
+uses; only step execution is virtual (costmodel latencies instead of XLA).
+
+Modes (paper §8.1):
+  separate — decode on instance 0, finetune solo on instance 1
+  static   — both instances co-located at a fixed 60/40 split
+  harli    — both instances co-located, dynamic quantum + window
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.scheduler import QoSScheduler, SchedulerConfig
+from repro.distributed.fault_tolerance import (StragglerConfig,
+                                               StragglerMitigator)
+from repro.models.config import ModelConfig
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mode: str = "harli"                 # harli | static | separate
+    qos_s: float = 0.040
+    k_max: int = 10
+    micro_batch: int = 2
+    ft_seq: int = 1024
+    accum: int = 8
+    max_slots: int = 64
+    n_decode_instances: int = 2
+    tp: int = 2            # 2 x 16GB chips: tight like the paper's Ada6000
+    static_quantum: float = 0.4         # StaticMode: 40% to finetune
+    static_mem_frac: float = 0.4        # StaticMode: 40% memory to finetune
+    share_base_weights: bool = False    # beyond-paper same-model sharing
+    snapshot_every: int = 20            # allocator timeline granularity
+    straggler_prob: float = 0.0         # per-round chance of a 3-8x overrun
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    mode: str
+    ft_units_done: int = 0
+    ft_iterations: float = 0.0
+    ft_throughput: float = 0.0          # iterations/s x minibatch (paper §8.2)
+    ft_stall_rounds: int = 0
+    tpot: List[float] = dataclasses.field(default_factory=list)
+    qos_violation_frac: float = 0.0
+    completed: int = 0
+    duration: float = 0.0
+    decode_rounds: int = 0
+    mean_batch: float = 0.0
+    batch_timeline: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+    quantum_timeline: List[Tuple[float, int, float, int]] = \
+        dataclasses.field(default_factory=list)   # (t, k, round_latency, bs)
+    memory_timeline: List[Dict] = dataclasses.field(default_factory=list)
+    predictor_report: Optional[object] = None
+
+
+# ---------------------------------------------------------------- finetune
+class FinetuneSim:
+    """Layer-unit progress + window streaming state machine."""
+
+    def __init__(self, cfg_ft: ModelConfig, cm: CostModel, sim: SimConfig,
+                 allocator: UnifiedAllocator, weights_resident: bool,
+                 fixed_window_chunks: Optional[int] = None):
+        self.cfg = cfg_ft
+        self.cm = cm
+        self.sim = sim
+        self.alloc = allocator
+        self.weights_resident = weights_resident
+        self.fixed_window_chunks = fixed_window_chunks
+        L = cfg_ft.num_layers
+        # unit -> layer id (-1 = no weights needed: embed/head/opt units)
+        per_mb = [-1] + list(range(L)) + [-1] + list(range(L - 1, -1, -1)) \
+            + [-1]
+        self.unit_layers = per_mb * sim.accum + [-1]
+        self.units_per_iter = len(self.unit_layers)
+        self.layer_bytes = cfg_ft.active_param_count() / max(L, 1) * 2.0
+        self.swap_s = self.layer_bytes / cm.inst.host_dma_bw
+        self.layers_per_chunk = max(
+            int(allocator.chunk_bytes // self.layer_bytes), 1) \
+            if self.layer_bytes > allocator.chunk_bytes else None
+        self.chunks_per_layer = max(
+            math.ceil(self.layer_bytes / allocator.chunk_bytes), 1)
+        # window state
+        self.resident: List[int] = []
+        self.dma_busy_until = 0.0
+        self.dma_loading: Optional[int] = None
+        self._need_known_t = 0.0
+        self.cursor = 0                  # next unit index (mod units_per_iter)
+        self.units_done = 0
+        self.stall_rounds = 0
+
+    # -- window geometry ---------------------------------------------------
+    def window_layers_cap(self) -> int:
+        if self.weights_resident:
+            return self.cfg.num_layers
+        chunks = self.alloc.window_capacity_chunks()
+        if self.fixed_window_chunks is not None:      # StaticMode
+            chunks = min(chunks, self.fixed_window_chunks)
+        return min(max(chunks // self.chunks_per_layer, 0),
+                   self.cfg.num_layers)
+
+    def _need_order(self, start_unit: int, horizon: int = 64) -> List[int]:
+        """Upcoming distinct layers in unit order."""
+        out, seen = [], set()
+        for d in range(horizon):
+            lay = self.unit_layers[(start_unit + d) % self.units_per_iter]
+            if lay >= 0 and lay not in seen:
+                seen.add(lay)
+                out.append(lay)
+        return out
+
+    def pump_dma(self, t: float) -> None:
+        """Advance the streaming channel's timeline up to time t. Loads
+        chain back-to-back on the channel; a load started at s lands at
+        s + swap_s. Needs become known at advance() time (= pump calls)."""
+        if self.weights_resident:
+            return
+        cap = self.window_layers_cap()
+        # inference memory pressure: evict furthest-from-need beyond cap
+        while len(self.resident) > cap:
+            order = self._need_order(self.cursor)
+            furthest = max(self.resident,
+                           key=lambda l: order.index(l) if l in order
+                           else len(order) + l)
+            self.resident.remove(furthest)
+        self.alloc.resize_window(
+            len(self.resident) * self.chunks_per_layer)
+        while True:
+            if self.dma_loading is not None:
+                if self.dma_busy_until > t:
+                    return                       # still streaming
+                if len(self.resident) < cap:
+                    self.resident.append(self.dma_loading)
+                    self.alloc.resize_window(
+                        len(self.resident) * self.chunks_per_layer)
+                self.dma_loading = None
+            order = self._need_order(self.cursor,
+                                     horizon=2 * self.units_per_iter
+                                     if self.units_per_iter < 2048 else 256)
+            nxt = next((l for l in order if l not in self.resident), None)
+            if nxt is None or cap == 0:
+                return
+            if len(self.resident) >= cap:
+                # paper §4.3: evict the completed layer to prefetch the next
+                # (Belady: furthest-from-next-use victim)
+                def dist(l):
+                    return order.index(l) if l in order else 10 ** 9
+                victim = max(self.resident, key=dist)
+                if dist(victim) <= order.index(nxt):
+                    return               # every resident layer needed sooner
+                self.resident.remove(victim)
+            # chain from the previous completion; a fresh need starts now
+            start = max(self.dma_busy_until, self._need_known_t)
+            self.dma_loading = nxt
+            self.dma_busy_until = start + self.swap_s
+
+    def units_available(self, t: float, k_max: int) -> int:
+        """How many consecutive upcoming units can run right now."""
+        self.pump_dma(t)
+        n = 0
+        for d in range(k_max):
+            lay = self.unit_layers[(self.cursor + d) % self.units_per_iter]
+            if lay >= 0 and not self.weights_resident and \
+                    lay not in self.resident:
+                break
+            n += 1
+        return n
+
+    def advance(self, k: int, t_end: float) -> None:
+        self.cursor = (self.cursor + k) % self.units_per_iter
+        self.units_done += k
+        self._need_known_t = t_end
+        self.pump_dma(t_end)
+
+    @property
+    def iterations(self) -> float:
+        return self.units_done / self.units_per_iter
+
+    def avg_unit_time_solo(self) -> float:
+        f = self.cm.unit_solo(self.sim.micro_batch, self.sim.ft_seq,
+                              backward=False, noisy=False)
+        b = self.cm.unit_solo(self.sim.micro_batch, self.sim.ft_seq,
+                              backward=True, noisy=False)
+        return (f + b) / 2
+
+
+# ----------------------------------------------------------- decode + colo
+class DecodeInstanceSim:
+    def __init__(self, inst_id: int, cfg_inf: ModelConfig,
+                 cfg_ft: Optional[ModelConfig], sim: SimConfig,
+                 predictor: Optional[TwoStageLatencyPredictor], seed: int,
+                 serves_inference: bool = True):
+        self.inst_id = inst_id
+        self.sim = sim
+        self.cfg_inf = cfg_inf
+        self.serves_inference = serves_inference
+        spec = InstanceSpec(tp=sim.tp)
+        self.cm_inf = CostModel(cfg_inf, spec, seed=seed)
+        self.colocate = cfg_ft is not None
+
+        weights = cfg_inf.param_count() * 2.0 if serves_inference else 0.0
+        pool = int(spec.hbm_bytes - weights)
+        assert pool > 0, "inference weights exceed instance HBM"
+        swap_guess = 0.002
+        self.alloc = UnifiedAllocator(AllocatorConfig(
+            total_bytes=pool, n_layers=cfg_inf.num_layers,
+            kv_bytes_per_token=cfg_inf.cache_bytes_per_token()
+            + (cfg_inf.state_bytes() // max(sim.max_slots, 1) if
+               cfg_inf.state_bytes() else 0),
+            max_bs=sim.max_slots, qos_s=sim.qos_s, swap_time_s=swap_guess))
+        fixed_window = None
+        if sim.mode == "static" and self.colocate:
+            # static 60/40 split: finetune owns a fixed fraction of the pool
+            fixed_window = int(self.alloc.total_chunks * sim.static_mem_frac)
+        self.ft: Optional[FinetuneSim] = None
+        if self.colocate:
+            cm_ft = CostModel(cfg_ft, spec, seed=seed + 1)
+            resident = sim.share_base_weights and cfg_ft.name == cfg_inf.name
+            self.ft = FinetuneSim(cfg_ft, cm_ft, sim, self.alloc, resident,
+                                  fixed_window_chunks=fixed_window)
+            self.alloc.cfg.swap_time_s = self.ft.swap_s
+        self.sched = None
+        if predictor is not None and sim.mode == "harli" and self.colocate:
+            self.sched = QoSScheduler(predictor, SchedulerConfig(
+                qos_s=sim.qos_s, k_max=sim.k_max))
+        # decode-round deadline monitor: overruns (preempted host, slow
+        # chip) shed finetune work first — never inference
+        self.straggler = StragglerMitigator(StragglerConfig())
+        self._rng = np.random.default_rng(seed + 101)
+        # inference admission budget (chunks): StaticMode caps inference at
+        # its static share; otherwise everything minus the reserve is usable
+        if sim.mode == "static" and self.colocate:
+            self.kv_budget_chunks = int(
+                self.alloc.total_chunks * (1 - sim.static_mem_frac))
+        else:
+            self.kv_budget_chunks = (self.alloc.total_chunks
+                                     - self.alloc.reserved_chunks)
+        self.result_tpot: List[float] = []
+        self.batch_timeline: List[Tuple[float, int]] = []
+        self.quantum_timeline: List[Tuple[float, int, float, int]] = []
+        self.rounds = 0
+        self.bs_accum = 0
+
+    def _can_admit(self, active: List[Request], cand: Request) -> bool:
+        """vLLM-style conservative admission: reserve prompt + max output
+        for every active request so decode never runs out of KV memory."""
+        tok = cand.prompt_len + cand.max_new_tokens
+        tok += sum(r.prompt_len + r.max_new_tokens for r in active)
+        need = math.ceil(tok / self.alloc.tokens_per_chunk)
+        return need <= self.kv_budget_chunks
+
+    def _pick_k(self, t, bs, ctx) -> int:
+        if not self.colocate:
+            return 0
+        if self.straggler.suppress_quantum and bs > 0:
+            self.ft.stall_rounds += 1
+            return 0
+        avail = self.ft.units_available(t, self.sim.k_max)
+        if avail == 0:
+            if bs > 0:
+                self.ft.stall_rounds += 1
+            return 0
+        if self.sim.mode == "static":
+            return min(int(round(self.sim.static_quantum * self.sim.k_max)),
+                       avail)
+        if self.sim.mode == "separate":
+            # separate-mode ft instance free-runs
+            return self.sim.k_max if bs == 0 else 0
+        d = self.sched.pick(bs, ctx, ft_ready=avail > 0,
+                            ft_units_available=avail)
+        return d.k
+
+    def run(self, reqs: List[Request], ready_times: Dict[int, float],
+            duration: float) -> None:
+        sim = self.sim
+        pending = sorted(reqs, key=lambda r: ready_times[r.rid])
+        qi = 0
+        active: List[Request] = []
+        t = 0.0
+        snap_ctr = 0
+        while t < duration:
+            # ---- admissions --------------------------------------------
+            while qi < len(pending) and ready_times[pending[qi].rid] <= t \
+                    and len(active) < sim.max_slots:
+                r = pending[qi]
+                if not self._can_admit(active, r):
+                    break
+                self.alloc.pressure_shrink()
+                if not self.alloc.kv_alloc_tokens(r.prompt_len):
+                    break
+                r.token_times.append(t)     # first token from prefill
+                r.generated = 1
+                active.append(r)
+                qi += 1
+            bs = len(active)
+            ctx = (sum(r.context_len for r in active) / bs) if bs else 0.0
+            # ---- idle fast-forward --------------------------------------
+            if bs == 0:
+                nxt = ready_times[pending[qi].rid] if qi < len(pending) \
+                    else duration
+                if self.colocate:
+                    k = self._pick_k(t, 0, 0.0)
+                    if k > 0:
+                        # free-run, but stop at the next arrival (+1 unit)
+                        unit = self.ft.avg_unit_time_solo()
+                        if t + k * unit > nxt:
+                            k = max(1, min(k, int((nxt - t) / unit) + 1))
+                        lat = k * unit
+                        self.ft.advance(k, t + lat)
+                        self.quantum_timeline.append((t, k, lat, 0))
+                        t = t + lat
+                        continue
+                    # stalled on DMA: jump to DMA completion or next arrival
+                    t = min(max(self.ft.dma_busy_until, t + 1e-4), nxt) \
+                        if self.ft.dma_busy_until > t else nxt
+                    continue
+                t = nxt
+                continue
+            # ---- co-scheduled decode round ------------------------------
+            k = self._pick_k(t, bs, ctx)
+            cm = self.cm_inf
+            if k > 0:
+                lat = cm.colocated_round(bs, ctx, k, sim.micro_batch,
+                                         sim.ft_seq)
+                expected = cm.colocated_round(bs, ctx, k, sim.micro_batch,
+                                              sim.ft_seq, noisy=False)
+            else:
+                lat = cm.decode_solo(bs, ctx)
+                expected = cm.decode_solo(bs, ctx, noisy=False)
+            if sim.straggler_prob and \
+                    self._rng.random() < sim.straggler_prob:
+                lat *= float(self._rng.uniform(3.0, 8.0))   # injected fault
+            t += lat
+            self.rounds += 1
+            self.bs_accum += bs
+            self.straggler.observe(lat, expected_s=expected)
+            if self.sched is not None:
+                self.sched.observe(lat)
+            if self.colocate and k > 0:
+                self.ft.advance(k, t)
+            elif self.colocate:
+                self.ft.pump_dma(t)
+            self.quantum_timeline.append((t, k, lat, bs))
+            self.batch_timeline.append((t, bs))
+            # ---- token bookkeeping --------------------------------------
+            self.alloc.pressure_shrink()
+            self.alloc.kv_alloc_tokens(bs)
+            done = []
+            for r in active:
+                r.token_times.append(t)
+                r.generated += 1
+                if r.generated >= r.max_new_tokens:
+                    r.finish = t
+                    done.append(r)
+            for r in done:
+                active.remove(r)
+                self.alloc.kv_free_tokens(r.context_len)
+            snap_ctr += 1
+            if snap_ctr % sim.snapshot_every == 0:
+                self.alloc.snapshot(t)
+        # collect TPOT
+        for r in reqs:
+            self.result_tpot.extend(r.tpot_samples())
+
+
+# ------------------------------------------------------------- experiment
+def simulate(cfg_inf: ModelConfig, cfg_ft: ModelConfig,
+             reqs: List[Request], sim: SimConfig,
+             duration: Optional[float] = None) -> SimResult:
+    spec = InstanceSpec(tp=sim.tp)
+    predictor = None
+    pred_report = None
+    if sim.mode == "harli":
+        predictor = TwoStageLatencyPredictor(k_max=sim.k_max)
+        cm_fit = CostModel(cfg_inf, spec, seed=sim.seed + 13)
+        pred_report = predictor.fit_from_costmodel(
+            cm_fit, micro_batch=sim.micro_batch, ft_seq=sim.ft_seq)
+
+    if sim.mode == "separate":
+        instances = [
+            DecodeInstanceSim(0, cfg_inf, None, sim, None, sim.seed),
+            DecodeInstanceSim(1, cfg_ft, cfg_ft, sim, None, sim.seed + 1,
+                              serves_inference=False),
+        ]
+        shares = [reqs, []]
+    else:
+        instances = [DecodeInstanceSim(i, cfg_inf, cfg_ft, sim, predictor,
+                                       sim.seed + i)
+                     for i in range(sim.n_decode_instances)]
+        shares = [[] for _ in range(sim.n_decode_instances)]
+        for idx, r in enumerate(sorted(reqs, key=lambda r: r.arrival)):
+            shares[idx % sim.n_decode_instances].append(r)
+
+    # one prefill instance per decode-serving instance (disaggregated pool
+    # scales with decode capacity — paper §8.1 deploys PD-disaggregated)
+    cm_prefill = CostModel(cfg_inf, spec, seed=sim.seed + 7)
+    ready: Dict[int, float] = {}
+    for share in shares:
+        t_pref = 0.0
+        for r in sorted(share, key=lambda r: r.arrival):
+            t_pref = max(t_pref, r.arrival) + cm_prefill.prefill_latency(
+                r.prompt_len)
+            ready[r.rid] = t_pref
+            r.prefill_done = t_pref
+    duration = duration or (max(ready.values()) + 30.0 if ready else 30.0)
+
+    for inst, share in zip(instances, shares):
+        inst.run(share, ready, duration)
+
+    res = SimResult(mode=sim.mode, duration=duration,
+                    predictor_report=pred_report)
+    minibatch = sim.micro_batch * sim.accum
+    for inst in instances:
+        if inst.ft is not None:
+            res.ft_units_done += inst.ft.units_done
+            res.ft_iterations += inst.ft.iterations
+            res.ft_stall_rounds += inst.ft.stall_rounds
+        res.tpot.extend(inst.result_tpot)
+        res.decode_rounds += inst.rounds
+        res.batch_timeline.extend(inst.batch_timeline)
+        res.quantum_timeline = inst.quantum_timeline \
+            if inst.colocate else res.quantum_timeline
+        res.memory_timeline = inst.alloc.timeline \
+            if inst.colocate else res.memory_timeline
+    res.ft_throughput = res.ft_iterations / duration * minibatch
+    res.completed = sum(1 for r in reqs if r.finish > 0)
+    if res.tpot:
+        viol = sum(1 for x in res.tpot if x > sim.qos_s * 1.05)
+        res.qos_violation_frac = viol / len(res.tpot)
+    if res.decode_rounds:
+        res.mean_batch = sum(b for _, b in res.batch_timeline) \
+            / max(len(res.batch_timeline), 1)
+    return res

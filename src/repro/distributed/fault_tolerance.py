@@ -1,0 +1,223 @@
+"""Fault tolerance: sharded checkpoints, elastic resharding, stragglers.
+
+Production posture for 1000+ nodes (DESIGN.md §5):
+  * checkpoints are written per-leaf with an atomic manifest commit
+    (tmp dir + rename), asynchronously off the training thread; any number
+    of retained steps; corruption-safe restore (last committed manifest);
+  * restore is *elastic*: arrays are re-laid-out onto whatever mesh the
+    restarted job has (``device_put`` with the new NamedSharding) — a pod
+    loss degrades to an (N-1)-pod mesh after restore;
+  * straggler mitigation at the decode-round granularity: rounds that
+    overrun a robust deadline trigger a quantum downgrade (finetune work is
+    the shock absorber — never the decode QoS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# numpy can't natively (de)serialize bf16/f8 — store a byte view and
+# reinterpret on restore using the manifest's logical dtype
+_EXOTIC = {"bfloat16": ml_dtypes.bfloat16,
+           "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+           "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _to_savable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+    return arr
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _EXOTIC:
+        return arr.view(_EXOTIC[dtype_name]).reshape(arr.shape[:-1])
+    return arr
+
+
+# ----------------------------------------------------------- tree <-> flat --
+def _flatten(tree, path=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, f"{path}/{k}" if path else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{path}/{i}")
+    else:
+        yield path, tree
+
+
+def _unflatten(template, flat: Dict[str, Any], path=""):
+    if isinstance(template, dict):
+        return {k: _unflatten(v, flat, f"{path}/{k}" if path else str(k))
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        out = [_unflatten(v, flat, f"{path}/{i}")
+               for i, v in enumerate(template)]
+        return type(template)(out) if isinstance(template, tuple) else out
+    return flat[path]
+
+
+class CheckpointManager:
+    """Atomic, async, sharded-restore checkpoint manager."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save --
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host_tree),
+                daemon=True)
+            self._thread.start()
+
+    def _write_guarded(self, step, tree):
+        try:
+            self._write(step, tree)
+        except BaseException as e:   # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, tree) -> None:
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = {"step": step, "leaves": {}, "time": time.time()}
+        for i, (path, leaf) in enumerate(_flatten(tree)):
+            fn = f"leaf_{i:05d}.npy"
+            arr = np.asarray(leaf)
+            np.save(tmp / fn, _to_savable(arr), allow_pickle=False)
+            manifest["leaves"][path] = {
+                "file": fn, "shape": list(arr.shape),
+                "dtype": arr.dtype.name}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = self.dir / f"step_{step}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                         # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # ---------------------------------------------------------- restore --
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():        # committed only
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: Optional[int] = None,
+                mesh: Optional[Mesh] = None, specs=None):
+        """Restore as numpy (mesh=None) or sharded onto `mesh` with `specs`
+        (elastic: the mesh may differ from the one that saved)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        spec_flat = dict(_flatten(specs)) if specs is not None else {}
+        for path, info in manifest["leaves"].items():
+            arr = _from_saved(np.load(d / info["file"]), info["dtype"])
+            if mesh is not None:
+                spec = spec_flat.get(path, P())
+                arr = jax.device_put(arr, NamedSharding(mesh, spec))
+            flat[path] = arr
+        return _unflatten(template, flat)
+
+
+def reshard(tree, mesh: Mesh, specs):
+    """Elastic re-layout of a live tree onto a (new) mesh."""
+    def put(leaf, spec):
+        return jax.device_put(np.asarray(leaf), NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs,
+                        is_leaf=lambda x: not isinstance(x, (dict, list,
+                                                             tuple)))
+
+
+# -------------------------------------------------------------- stragglers --
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 64             # rounds in the rolling estimate
+    deadline_factor: float = 2.5  # x median = overrun
+    cooloff_rounds: int = 8      # quantum suppressed after an overrun
+
+
+class StragglerMitigator:
+    """Decode-round deadline monitor: overruns (preemption, slow host,
+    failing chip) shed finetune work first, never inference."""
+
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.history: List[float] = []
+        self.overruns = 0
+        self._cooloff = 0
+
+    def deadline(self) -> float:
+        if len(self.history) < 8:
+            return float("inf")
+        h = sorted(self.history[-self.cfg.window:])
+        return h[len(h) // 2] * self.cfg.deadline_factor
+
+    def observe(self, round_s: float,
+                expected_s: Optional[float] = None) -> bool:
+        """Returns True when the round overran (caller drops quantum).
+
+        With `expected_s` (the cost/predictor estimate for THIS round's
+        (bs, k)), the gate is vs expectation — robust to the bimodal round
+        distributions that co-location produces (k=0 vs k=k_max rounds
+        differ 3x by design and must not look like stragglers). Without it,
+        falls back to a rolling-median deadline."""
+        if expected_s is not None and expected_s > 0:
+            over = round_s > 2.0 * expected_s
+        else:
+            over = round_s > self.deadline()
+        self.history.append(round_s)
+        if over:
+            self.overruns += 1
+            self._cooloff = self.cfg.cooloff_rounds
+        elif self._cooloff > 0:
+            self._cooloff -= 1
+        return over
+
+    @property
+    def suppress_quantum(self) -> bool:
+        return self._cooloff > 0

@@ -1,0 +1,153 @@
+"""Logical-axis sharding for the whole model zoo.
+
+Models annotate activations/params with *logical* axis names; a mesh-rules
+context (installed by the launcher / dry-run) resolves them to mesh axes and
+applies ``with_sharding_constraint``. Without an active context every
+``constrain`` is a no-op, so all model code runs unchanged single-device.
+
+Parallelism mapping (production mesh, see DESIGN.md §5):
+  batch   -> ("pod", "data")   pure DP (pod axis crosses pods)
+  heads / kv_heads / ff / expert / vocab -> "model"   TP / EP
+  seq_sp  -> "model"           sequence-parallel residual stream between layers
+  rank    -> None              LoRA rank stays replicated (tiny)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# Default logical->mesh rules for the production meshes. "pod" is folded into
+# the batch axes only when the mesh has one.
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,          # sequence dim of *inputs* stays replicated-within-dp
+    "seq_sp": "model",    # sequence-parallel residual stream
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_per_kv": None,
+    "head_dim": None,
+    "ff": "model",
+    "expert": ("data", "model"),   # full EP when E divides (deepseek: 256)
+    "expert_cap": None,
+    "vocab": "model",
+    "rank": None,
+    "layers": None,
+    "kv_seq": None,       # KV-cache sequence dim (hillclimb: -> "model")
+    "state": None,
+    "pages": ("pod", "data"),
+}
+
+
+# FSDP strategy (train cells whose global batch divides the whole mesh):
+# activations are purely batch-sharded over every axis; weights are fully
+# sharded and GSPMD inserts the per-layer all-gathers. With LoRA (no base
+# grads) this removes ALL per-layer activation collectives — see
+# EXPERIMENTS.md §Perf cell C.
+FSDP_RULES: Dict[str, Axis] = {k: None for k in DEFAULT_RULES}
+FSDP_RULES["batch"] = ("pod", "data", "model")
+FSDP_RULES["pages"] = ("pod", "data")
+
+
+class _MeshCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Axis] = {}
+
+
+_CTX = _MeshCtx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+    """Install a mesh + logical-axis rules for model tracing."""
+    prev = (_CTX.mesh, _CTX.rules)
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    # Drop rules that reference axes absent from this mesh.
+    resolved = {}
+    names = set(mesh.axis_names)
+    for k, v in rules.items():
+        if v is None:
+            resolved[k] = None
+        elif isinstance(v, str):
+            resolved[k] = v if v in names else None
+        else:
+            kept = tuple(a for a in v if a in names)
+            resolved[k] = kept if kept else None
+    _CTX.mesh, _CTX.rules = mesh, resolved
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve(logical: Sequence[Optional[str]]) -> P:
+    spec = []
+    for name in logical:
+        if name is None:
+            spec.append(None)
+        else:
+            spec.append(_CTX.rules.get(name))
+    return P(*spec)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axis names; no-op without a mesh.
+    Axes that do not divide the dimension evenly are dropped (replicated) —
+    e.g. mixtral's 8 experts on a 16-way model axis."""
+    if _CTX.mesh is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank mismatch: {x.shape} vs logical {logical}")
+    spec = resolve(logical)
+    fixed = []
+    used: set = set()
+    for dim, axis in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        # a mesh axis may appear on at most one dim: first dim wins
+        if isinstance(axis, tuple):
+            axis = tuple(a for a in axis if a not in used) or None
+            if isinstance(axis, tuple) and len(axis) == 1:
+                axis = axis[0]
+        elif axis in used:
+            axis = None
+        n = _axis_size(_CTX.mesh, axis)
+        keep = axis if (n > 1 and dim % n == 0) else None
+        if keep is not None:
+            used.update(keep if isinstance(keep, tuple) else (keep,))
+        fixed.append(keep)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, P(*fixed))
+    )
+
+
+def named_sharding(logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, resolve(logical))
+
+
+def sharding_for(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

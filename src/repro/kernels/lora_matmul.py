@@ -1,0 +1,82 @@
+"""Fused LoRA matmul: y = x @ W + s * (x @ A) @ B — the finetune hot-spot.
+
+The rank-r intermediate xa never round-trips through HBM: it is computed on
+the first n-block of each m-row and kept in VMEM scratch while the row's
+output tiles stream through the MXU. Tiles are 128-aligned for the systolic
+array; K is looped inside the kernel via the grid's innermost dimension with
+a float32 accumulator in scratch.
+
+Grid: (M/bm, N/bn, K/bk) — k innermost (accumulation), n middle, m outer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+            scale: float, n_k: int):
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(
+        x, w_ref[...], preferred_element_type=jnp.float32)
+
+    # accumulate xa = x @ A on the first n-block only (same for all n)
+    @pl.when(n == 0)
+    def _xa():
+        @pl.when(k == 0)
+        def _z():
+            xa_ref[...] = jnp.zeros_like(xa_ref)
+        xa_ref[...] += jax.lax.dot(
+            x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _fin():
+        y = acc_ref[...] + scale * jax.lax.dot(
+            xa_ref[...].astype(b_ref.dtype), b_ref[...],
+            preferred_element_type=jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def lora_matmul(x, w, a, b, scale: float, *, block_m: int = 128,
+                block_n: int = 128, block_k: int = 512,
+                interpret: bool = True):
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N). Returns (M, N)."""
+    M, K = x.shape
+    _, N = w.shape
+    r = a.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"shapes must tile: {(M, N, K)} by {(bm, bn, bk)}"
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bk, r), lambda m, n, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)
+    return out

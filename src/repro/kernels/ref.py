@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                               scale=None):
+    """Dense gather + softmax oracle. Shapes as in decode_attention."""
+    B, H, hd = q.shape
+    P, ptok, KV, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    g = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    pt = jnp.maximum(page_table, 0)
+    k = k_pages[pt].reshape(B, n_pages * ptok, KV, hd)
+    v = v_pages[pt].reshape(B, n_pages * ptok, KV, hd)
+    pos = jnp.arange(n_pages * ptok)[None, :]
+    valid = (pos < lengths[:, None]) & \
+        jnp.repeat(page_table >= 0, ptok, axis=1)
+    qr = q.reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isneginf(m), 0.0, m)
+    e = jnp.exp(s - m)
+    e = jnp.where(valid[:, None, None, :], e, 0.0)
+    o = jnp.einsum("bkgs,bskh->bkgh", e, v.astype(jnp.float32))
+    o = o / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ w + scale * (x @ a) @ b. x: (M, K), w: (K, N), a: (K, r),
+    b: (r, N)."""
+    y = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), w.astype(jnp.float32))
+    xa = jnp.einsum("mk,kr->mr", x.astype(jnp.float32), a.astype(jnp.float32))
+    y = y + scale * jnp.einsum("mr,rn->mn", xa, b.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def ssd_scan_ref(xs, dt, A, Bt, Ct, chunk, h0=None):
+    """Chunked SSD oracle — delegates to the model's reference implementation
+    (itself validated against a sequential recurrence in tests)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(xs, dt, A, Bt, Ct, chunk, h0=h0)
+
+
+def ssd_sequential_ref(xs, dt, A, Bt, Ct, h0=None):
+    """O(S) sequential recurrence — ground truth for the chunked forms."""
+    B, S, nh, hd = xs.shape
+    ds = Bt.shape[-1]
+    h = jnp.zeros((B, nh, hd, ds), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    xs = xs.astype(jnp.float32)
+    Bt = Bt.astype(jnp.float32)
+    Ct = Ct.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a_t = jnp.exp(dt_t * A[None, :])                    # (B, nh)
+        h = a_t[:, :, None, None] * h + jnp.einsum(
+            "bh,bhp,bs->bhps", dt_t, x_t, b_t)
+        y = jnp.einsum("bs,bhps->bhp", c_t, h)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h,
+        (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bt, 1, 0), jnp.moveaxis(Ct, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT

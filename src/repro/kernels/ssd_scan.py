@@ -1,0 +1,103 @@
+"""Mamba2 SSD chunked scan kernel (intra-chunk quadratic + carried state).
+
+The SSD recurrence is re-blocked for the TPU memory hierarchy: the grid walks
+(batch, head-block, chunk) with the chunk dimension innermost; the running
+state h (nhb, hd, ds) lives in VMEM scratch across chunk steps, so HBM sees
+each token exactly once (the recurrent analogue of flash attention). The
+intra-chunk quadratic form (c x c) is MXU work; chunk size 64 keeps the
+decay tensor inside VMEM at fp32.
+
+Inputs (pre-chunked, dt already softplus'ed):
+  xs (B, n, c, nh, hd)   dt (B, n, c, nh)   A (nh,)
+  Bt (B, n, c, ds)       Ct (B, n, c, ds)   h0 (B, nh, hd, ds)
+Outputs: y (B, n, c, nh, hd) fp32, hT (B, nh, hd, ds) fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xs_ref, dt_ref, a_ref, bt_ref, ct_ref, h0_ref,
+            y_ref, ht_ref, h_ref):
+    n = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(n == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    xs = xs_ref[0, 0].astype(jnp.float32)       # (c, nhb, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)       # (c, nhb)
+    A = a_ref[0].astype(jnp.float32)            # (nhb,)
+    Bt = bt_ref[0, 0].astype(jnp.float32)       # (c, ds)
+    Ct = ct_ref[0, 0].astype(jnp.float32)       # (c, ds)
+    c = xs.shape[0]
+
+    la = dt * A[None, :]                        # (c, nhb) log-decay
+    cum = jnp.cumsum(la, axis=0)
+
+    # intra-chunk quadratic form
+    scores = jax.lax.dot_general(Ct, Bt, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (c, c)
+    decay = cum[:, None, :] - cum[None, :, :]                  # (c, c, nhb)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    m = jnp.where(tril[:, :, None], scores[:, :, None] * jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("cmh,mh,mhp->chp", m, dt, xs)
+
+    # inter-chunk contribution from the carried state
+    h = h_ref[...]                                             # (nhb, hd, ds)
+    y_inter = jnp.einsum("cs,hps,ch->chp", Ct, h, jnp.exp(cum))
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_end) * h + sum_j exp(cum_end - cum_j) dt x B
+    dec_end = jnp.exp(cum[-1][None, :] - cum)                  # (c, nhb)
+    h_new = jnp.exp(cum[-1])[:, None, None] * h + jnp.einsum(
+        "ch,ch,chp,cs->hps", dec_end, dt, xs, Bt)
+    h_ref[...] = h_new
+
+    @pl.when(n == n_chunks - 1)
+    def _fin():
+        ht_ref[0] = h_new.astype(ht_ref.dtype)
+
+
+def ssd_scan_chunked(xs, dt, A, Bt, Ct, h0, *, nhb: int = 8,
+                     interpret: bool = True):
+    """Pre-chunked SSD scan. Shapes per module docstring."""
+    B, n, c, nh, hd = xs.shape
+    ds = Bt.shape[-1]
+    nhb = min(nhb, nh)
+    assert nh % nhb == 0, (nh, nhb)
+    hb = nh // nhb
+    grid = (B, hb, n)
+
+    y, ht = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, nhb, hd), lambda b, h, n: (b, n, 0, h, 0)),
+            pl.BlockSpec((1, 1, c, nhb), lambda b, h, n: (b, n, 0, h)),
+            pl.BlockSpec((1, nhb), lambda b, h, n: (0, h)),
+            pl.BlockSpec((1, 1, c, ds), lambda b, h, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, c, ds), lambda b, h, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, nhb, hd, ds), lambda b, h, n: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, nhb, hd), lambda b, h, n: (b, n, 0, h, 0)),
+            pl.BlockSpec((1, nhb, hd, ds), lambda b, h, n: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n, c, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nhb, hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xs, dt, A.reshape(1, nh), Bt, Ct, h0)
+    return y, ht

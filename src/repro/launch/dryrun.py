@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the production
+mesh is built from 512 host placeholder devices (the two lines above MUST
+precede any jax import), every cell's step function is jit'd with explicit
+in_shardings, lowered, compiled, and its memory_analysis / cost_analysis /
+collective schedule recorded to JSON (benchmarks/roofline.py reads these).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+Results: dryrun_results/<arch>__<shape>__<mesh>.json (incremental cache).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import hw
+from repro.configs import SHAPES, cells, get_config
+from repro.distributed import partitioning as PT
+from repro.distributed.sharding import use_mesh
+from repro.launch import hlo_analysis as HA
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "dryrun_results"
+
+
+def _analytic_activation_bytes(cfg, cell, mesh) -> int:
+    """Per-device activation watermark on TPU (bf16 natively; no legalized
+    f32 weight copies). Conservative: working-set terms use x4 headroom."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = names.get("data", 1) * names.get("pod", 1)
+    tp = names.get("model", 1)
+    B, S, d = cell.global_batch, cell.seq_len, cfg.d_model
+    V = cfg.vocab_size
+    from repro.models.model import _plan
+    _, _, n_scan, _ = _plan(cfg)
+    dp_eff = dp if B % dp == 0 else 1
+    sp_eff = tp if S % tp == 0 else 1
+    tok_sp = B * S / dp_eff / sp_eff       # fully sharded token count
+    tok_dp = B * S / dp_eff                # dp-sharded only
+    if cell.kind == "decode":
+        # one-token round: scores + per-layer workset (cache is in args)
+        ctx = cfg.effective_cache_len(S)
+        scores = (B / dp_eff) * cfg.num_heads * (ctx / sp_eff) * 4
+        return int(4 * scores + 8 * (B / dp_eff) * d * 4 + 2 ** 28)
+    work = 4 * tok_sp * d * 2 * 4          # per-layer transient (x4 slack)
+    if cfg.moe:
+        cf = cfg.capacity_factor
+        xe = cfg.top_k * cf * tok_dp / tp * (d + cfg.moe_d_ff) * 2
+        work += 3 * xe
+    if cell.kind == "prefill":
+        return int(work + 2 ** 28)
+    # train: remat carries + flash bwd accumulators + CE logits
+    carries = (n_scan + 1) * tok_sp * d * 2
+    flash = 2 * (B / dp_eff) * cfg.effective_cache_len(S) \
+        * cfg.num_kv_heads * cfg.head_dim * 4
+    vshard = tp if V % tp == 0 else 1
+    # CE is fused+chunked (layers.chunked_softmax_xent): per-chunk logits
+    ce = 2 * (B / dp_eff) * 256 * (V / vshard) * 4
+    return int(carries + 2 * work + flash + ce + 2 ** 28)
+
+
+# -------------------------------------------------------------- shardings --
+def pick_strategy(cfg, cell, mesh) -> str:
+    """Per-cell sharding strategy (§Perf cells C/D): LoRA train steps whose
+    global batch covers the whole mesh go pure-FSDP (no per-layer activation
+    collectives). MoE archs join when the per-layer weight gather is
+    affordable (mixtral: 2.8 GB/layer -> FSDP wins ~5x; deepseek-v3:
+    22.5 GB/layer -> EP stays the right call)."""
+    n_dev = int(mesh.devices.size)
+    if cell.kind == "train" and cell.global_batch % n_dev == 0:
+        layer_bytes = cfg.param_count() / max(cfg.num_layers, 1) * 2.0
+        if not cfg.moe or layer_bytes < 4e9:
+            return "fsdp"
+    return "tp"
+
+
+def arg_shardings(cfg, cell_kind, args, mesh, strategy: str = "tp"):
+    """in_shardings tree matching make_cell_fn's arg order."""
+    axes = PT.MeshAxes()
+    if cell_kind == "train":
+        params, adapters, opt, batch = args
+        if strategy == "fsdp":
+            fs_batch = _walk_batch_fsdp(batch, mesh)
+            return (
+                PT.fsdp_param_specs(cfg, params, mesh),
+                PT.adapter_specs(cfg, adapters, mesh, axes),
+                jax.tree.map(lambda _: P(), opt),
+                fs_batch,
+            )
+        return (
+            PT.param_specs(cfg, params, mesh, axes),
+            PT.adapter_specs(cfg, adapters, mesh, axes),
+            jax.tree.map(lambda _: P(), opt),
+            PT.batch_specs(batch, mesh, axes),
+        )
+    if cell_kind == "prefill":
+        params, batch, cache = args
+        return (
+            PT.param_specs(cfg, params, mesh, axes),
+            PT.batch_specs(batch, mesh, axes),
+            PT.cache_specs(cfg, cache, mesh, axes),
+        )
+    params, tokens, positions, cache = args
+    ax = axes.present(mesh)
+    tokspec = P(PT._fit(mesh, tokens.shape[0], ax.dp))
+    return (
+        PT.param_specs(cfg, params, mesh, axes),
+        tokspec, tokspec,
+        PT.cache_specs(cfg, cache, mesh, axes),
+    )
+
+
+def _walk_batch_fsdp(batch, mesh):
+    axes = ("pod", "data", "model")
+    present = tuple(a for a in axes if a in mesh.axis_names)
+
+    def spec(path, leaf):
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 1 and leaf.shape[0] % PT._axis_size(
+                mesh, present) == 0:
+            dims[0] = present
+        return P(*dims)
+
+    return PT._walk(batch, spec)
+
+
+def to_named(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- one cell --
+def run_cell(arch: str, shape: str, mesh_kind: str, force: bool = False,
+             kv_quant: bool = False):
+    import dataclasses as _dc
+    RESULTS_DIR.mkdir(exist_ok=True)
+    suffix = "__kvq" if kv_quant else ""
+    out_path = RESULTS_DIR / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        print(f"[skip] {out_path.name} (cached)")
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = _dc.replace(cfg, kv_quant=True)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "chips": int(n_chips), "kind": cell.kind,
+           "seq_len": cell.seq_len, "global_batch": cell.global_batch}
+    try:
+        step, args = SP.make_cell_fn(cfg, cell)
+        strategy = pick_strategy(cfg, cell, mesh)
+        rec["strategy"] = strategy
+        shardings = arg_shardings(cfg, cell.kind, args, mesh, strategy)
+        # donation: the decode/prefill cache and the train adapter/optimizer
+        # states are updated in place (aliased buffers) — without it every
+        # step would hold two copies of the KV cache
+        donate = {"train": (1, 2), "prefill": (2,), "decode": (3,)}[cell.kind]
+        from repro.distributed.sharding import FSDP_RULES
+        rules = FSDP_RULES if strategy == "fsdp" else None
+        with use_mesh(mesh, rules=rules):
+            jitted = jax.jit(step, in_shardings=to_named(shardings, mesh),
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        stats = HA.analyze(hlo)
+
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            # per-device buffer sizes (proves HBM fit)
+            "memory": {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+            },
+            # raw cost_analysis (counts while bodies once — kept for
+            # reference; the roofline uses the trip-corrected hlo stats)
+            "cost_raw": {k: float(v) for k, v in cost.items()
+                         if isinstance(v, (int, float)) and
+                         k in ("flops", "bytes accessed", "transcendentals")},
+            # trip-count-corrected per-device analysis
+            "hlo": stats.as_dict(),
+            "hlo_bytes": len(hlo),
+        })
+        mm = rec["memory"]
+        resident = (mm["argument_size_in_bytes"]
+                    + mm["output_size_in_bytes"]
+                    + mm["temp_size_in_bytes"]
+                    - mm["alias_size_in_bytes"])
+        # CPU-backend artifact: bf16 dots are legalized via hoisted f32
+        # weight copies that do not exist on TPU (native bf16 MXU). The
+        # instruction-level estimate can over/under-count vs the liveness-
+        # aware buffer assignment, so an analytic activation watermark is
+        # recorded as the primary TPU figure (EXPERIMENTS.md §Dry-run).
+        upcast = HA.cpu_bf16_upcast_bytes(hlo)
+        weights_cache = (mm["argument_size_in_bytes"]
+                         + mm["output_size_in_bytes"]
+                         - mm["alias_size_in_bytes"])
+        act = _analytic_activation_bytes(cfg, cell, mesh)
+        rec["memory"]["cpu_bf16_upcast_bytes"] = int(upcast)
+        rec["memory"]["resident_bytes"] = int(resident)
+        rec["memory"]["resident_tpu_bytes"] = int(
+            max(resident - upcast, weights_cache))
+        rec["memory"]["analytic_activation_bytes"] = int(act)
+        rec["memory"]["resident_analytic_bytes"] = int(weights_cache + act)
+        # analytic workload for the MODEL_FLOPS/HLO_FLOPS ratio
+        n_total = cfg.param_count()
+        n_active = cfg.active_param_count()
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.enc_layers:
+            # enc-dec: seq splits enc/dec halves; the (frozen) encoder is
+            # forward-only in PEFT training
+            d, ff = cfg.d_model, cfg.d_ff
+            per_attn = 4 * d * cfg.num_heads * cfg.head_dim
+            n_enc = cfg.enc_layers * (per_attn + 3 * d * ff + 2 * d)
+            n_dec = n_active - n_enc
+            if cell.kind == "train":
+                rec["model_flops"] = (6.0 * n_dec + 2.0 * n_enc) * tokens / 2
+            elif cell.kind == "prefill":
+                rec["model_flops"] = 2.0 * n_active * tokens / 2
+            else:
+                rec["model_flops"] = 2.0 * n_dec * cell.global_batch
+        elif cell.kind == "train":
+            rec["model_flops"] = 6.0 * n_active * tokens
+        elif cell.kind == "prefill":
+            rec["model_flops"] = 2.0 * n_active * tokens
+        else:
+            rec["model_flops"] = 2.0 * n_active * cell.global_batch
+        rec["params_total"] = n_total
+        rec["params_active"] = n_active
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    rec["wall_s"] = round(time.time() - t0, 2)
+    out_path.write_text(json.dumps(rec, indent=1))
+    status = "ok" if rec.get("ok") else "FAIL"
+    print(f"[{status}] {arch} x {shape} x {mesh_kind} "
+          f"({rec['wall_s']}s)" + ("" if rec.get("ok") else
+                                   f"\n  {rec['error']}"))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache variant (writes __kvq.json)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok = fail = 0
+    if args.all:
+        for arch, shape, skip in cells(include_skipped=True):
+            if skip:
+                print(f"[SKIP-CELL] {arch} x {shape}: {skip}")
+                continue
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, args.force)
+                ok += bool(rec.get("ok"))
+                fail += not rec.get("ok")
+    else:
+        for mk in meshes:
+            rec = run_cell(args.arch, args.shape, mk, args.force,
+                           kv_quant=args.kv_quant)
+            ok += bool(rec.get("ok"))
+            fail += not rec.get("ok")
+    print(f"done: {ok} ok, {fail} failed")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

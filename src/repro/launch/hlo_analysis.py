@@ -1,0 +1,227 @@
+"""Post-optimization HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which under
+scan-over-layers understates a 61-layer model by ~60x. This module parses
+``compiled.as_text()`` instead:
+
+  * builds the computation call graph (while bodies, fusion calls),
+  * propagates loop trip counts (``known_trip_count`` backend configs) so an
+    op inside a scanned layer counts num_layers times,
+  * sums matmul FLOPs from ``dot`` ops (2 * prod(result dims) * K) — matmuls
+    dominate every cell; elementwise FLOPs are ignored and this is recorded,
+  * sums collective bytes (result sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute).
+
+All numbers are PER DEVICE (the SPMD module is per-partition); the roofline
+multiplies by chip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4, "s8": 1,
+    "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# computation headers start at column 0: "%name (args...) -> type {" —
+# args may contain nested tuple parens, so match only the name prefix
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s+\(")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-$]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+                  r"([\w\-$]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_info(sig: str) -> Tuple[int, List[int]]:
+    """(bytes, dims) of the FIRST array shape in a type signature."""
+    m = _SHAPE.search(sig)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[m.group(1)], dims
+
+
+def _tuple_bytes(sig: str) -> int:
+    total = 0
+    for dt, ds in _SHAPE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in ds.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVES})
+    collective_f32_bytes: float = 0.0   # CPU bf16-legalization inflated
+    loop_trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def collective_total_tpu(self) -> float:
+        """bf16-equivalent: f32 collectives carrying legalized-bf16 data
+        move half the bytes on TPU."""
+        return self.collective_total - self.collective_f32_bytes / 2
+
+    def as_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "collective_bytes": dict(self.collective_bytes,
+                                     total=self.collective_total,
+                                     total_tpu=self.collective_total_tpu),
+            "collective_counts": self.collective_counts,
+            "loop_trip_counts": self.loop_trip_counts,
+        }
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def analyze(hlo: str) -> HloStats:
+    comps = _split_computations(hlo)
+    stats = HloStats()
+
+    # --- call graph + loop multipliers --------------------------------
+    callers: Dict[str, List[str]] = {}          # callee -> [caller]
+    trip: Dict[str, int] = {}                   # while-body comp -> trips
+    for name, lines in comps.items():
+        for line in lines:
+            for mm in re.finditer(r"(?:calls|body|condition|to_apply)"
+                                  r"=%?([\w.\-$]+)", line):
+                callers.setdefault(mm.group(1), []).append(name)
+            wb = re.search(r"body=%?([\w.\-$]+)", line)
+            if wb:
+                tc = re.search(r'known_trip_count..?.?.?n.?.?.?"?(\d+)', line)
+                if tc:
+                    trip[wb.group(1)] = int(tc.group(1))
+                    stats.loop_trip_counts.append(int(tc.group(1)))
+
+    def eff_mult(comp: str, depth: int = 0) -> int:
+        if depth > 16:
+            return 1
+        m = trip.get(comp, 1)
+        cs = callers.get(comp, [])
+        if not cs:
+            return m
+        return m * max(eff_mult(c, depth + 1) for c in cs)
+
+    mults = {name: eff_mult(name) for name in comps}
+
+    # --- per-computation op accounting ---------------------------------
+    for name, lines in comps.items():
+        k = mults.get(name, 1)
+        shapes: Dict[str, List[int]] = {}
+        for line in lines:
+            d = _DEF.match(line)
+            if not d:
+                pm = re.match(r"\s*%?([\w.\-$]+)\s*=\s*(\S+)\s+parameter",
+                              line)
+                if pm:
+                    _, dims = _shape_info(pm.group(2))
+                    shapes[pm.group(1)] = dims
+                continue
+            var, sig, op = d.groups()
+            _, dims = _shape_info(sig)
+            shapes[var] = dims
+            if op == "dot":
+                flops = _dot_flops(line, sig, shapes)
+                stats.dot_flops += flops * k
+            elif op in COLLECTIVES or \
+                    op.replace("-start", "") in COLLECTIVES:
+                base = op.replace("-start", "")
+                if base in COLLECTIVES:
+                    b = _tuple_bytes(sig)
+                    stats.collective_bytes[base] += b * k
+                    stats.collective_counts[base] += 1
+                    if "f32[" in sig:
+                        stats.collective_f32_bytes += b * k
+    return stats
+
+
+def _dot_flops(line: str, result_sig: str, shapes: Dict[str, List[int]]
+               ) -> float:
+    """2 * prod(result dims) * prod(contracting dims)."""
+    _, rdims = _shape_info(result_sig)
+    n = 1
+    for d in rdims:
+        n *= d
+    ops = re.search(r"dot\(\s*%?([\w.\-$]+)", line)
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    kprod = 1
+    if ops and lc and ops.group(1) in shapes:
+        lshape = shapes[ops.group(1)]
+        for idx in lc.group(1).split(","):
+            if idx and int(idx) < len(lshape):
+                kprod *= lshape[int(idx)]
+    return 2.0 * n * kprod
+
+
+def cpu_bf16_upcast_bytes(hlo: str) -> int:
+    """Bytes of f32 buffers that exist only because the CPU backend
+    legalizes bf16 dots by upcasting weights to f32 (hoisted out of layer
+    loops). A real TPU executes those dots natively in bf16, so per-chip
+    memory on hardware excludes these buffers.
+
+    Heuristic: every distinct ``f32 convert(...)`` instruction >= 16MB whose
+    leading dim equals a known loop trip count (a scanned weight stack) or
+    whose dims match a bf16 entry-parameter shape. Counted once per
+    variable (gate/up/down stacks share shapes but are separate buffers)."""
+    trips = set()
+    for m in re.finditer(r'known_trip_count..?.?.?n.?.?.?"?(\d+)', hlo):
+        trips.add(int(m.group(1)))
+    bf16_param_shapes = set()
+    for m in re.finditer(r"=\s*bf16\[([0-9,]+)\]\S*\s+parameter", hlo):
+        bf16_param_shapes.add(tuple(int(d) for d in m.group(1).split(",")))
+
+    seen_vars = set()
+    total = 0
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-$]+)\s*=\s*f32\[([0-9,]+)\]\S*"
+                     r"\s+convert\(", line)
+        if not m:
+            continue
+        var = m.group(1)
+        dims = tuple(int(d) for d in m.group(2).split(","))
+        n = 1
+        for d in dims:
+            n *= d
+        if n * 4 < 16 * 1024 * 1024 or var in seen_vars:
+            continue
+        if dims[0] in trips or dims in bf16_param_shapes:
+            seen_vars.add(var)
+            total += n * 4
+    return total

@@ -1,0 +1,135 @@
+"""Serving driver: decode instance, optionally co-located with PEFT (Harli).
+
+Real compute on CPU with reduced configs; the paper-scale co-location
+numbers come from benchmarks/ (cost-model simulator).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --requests 12 --colocate
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.core.colocation import ColocatedRunner
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.scheduler import QoSScheduler, SchedulerConfig
+from repro.models import model as MD
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+from repro.serving.trace import TraceConfig, generate
+from repro.training import peft as P
+from repro.training.data import DataConfig, Prefetcher, SyntheticCorpus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--ft-arch", default="")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=160)
+    ap.add_argument("--colocate", action="store_true")
+    ap.add_argument("--k-max", type=int, default=6)
+    ap.add_argument("--use-kernels", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = MD.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_slots=args.slots, s_max=args.s_max,
+                        enc_len=16 if cfg.enc_layers else 0,
+                        use_kernels=args.use_kernels)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=i * 0.05,
+                    prompt_len=int(rng.integers(8, 24)),
+                    max_new_tokens=int(rng.integers(4, 12)))
+            for i in range(args.requests)]
+
+    runner = None
+    sched = None
+    ft_state = None
+    if args.colocate:
+        ft_name = args.ft_arch or args.arch
+        cfg_ft = smoke_config(ft_name) if args.smoke else get_config(ft_name)
+        params_ft = MD.init_params(cfg_ft, jax.random.PRNGKey(1))
+        pc = P.PeftConfig(micro_batch=2, seq_len=32, accum=1)
+        pf = Prefetcher(SyntheticCorpus(DataConfig(
+            cfg_ft.vocab_size, 32, 2,
+            enc_frames=16 if cfg_ft.enc_layers else 0,
+            d_model=cfg_ft.d_model)).batches(), pc.n_stage)
+        ft_state = P.init_ft_state(cfg_ft, pc, params_ft,
+                                   jax.random.PRNGKey(2), pf.stacked())
+        runner = ColocatedRunner(cfg, params, cfg_ft, params_ft, pc,
+                                 k_max=args.k_max, donate=False)
+        pred = TwoStageLatencyPredictor(k_max=args.k_max)
+        pred.fit_from_costmodel(CostModel(get_config(args.arch),
+                                          InstanceSpec(tp=2)))
+        sched = QoSScheduler(pred, SchedulerConfig(k_max=args.k_max))
+
+    t0 = time.time()
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    qi = 0
+    rounds = 0
+    units_done = 0
+    while rounds < 3000:
+        while qi < len(pending):
+            r = pending[qi]
+            toks = rng.integers(0, cfg.vocab_size, size=r.prompt_len,
+                                dtype=np.int32)
+            if eng.try_admit(r, toks, eng._stub_extras(r)):
+                qi += 1
+            else:
+                break
+        active = eng.active_requests()
+        if not active and qi >= len(pending):
+            break
+        if runner is not None and active:
+            bs = len(active)
+            ctx = sum(r.context_len for r in active) / bs
+            k = sched.pick(bs, ctx, ft_ready=True,
+                           ft_units_available=args.k_max).k
+            tokens = jnp.asarray(eng.last_token)
+            positions = np.zeros((eng.max_slots,), np.int32)
+            for i, r in enumerate(eng.slots):
+                if r is not None:
+                    positions[i] = r.context_len
+            logits, eng.cache, ft_state = runner.run_round(
+                k, tokens, jnp.asarray(positions), eng.cache, ft_state)
+            units_done += k
+            nt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for i, r in enumerate(eng.slots):
+                if r is None:
+                    continue
+                eng.pages.extend(r.slot, 1)
+                eng.last_token[i] = nt[i]
+                r.generated += 1
+                eng.metrics.tokens_out += 1
+                if r.generated >= r.max_new_tokens:
+                    from repro.serving.request import Phase
+                    r.phase = Phase.DONE
+                    eng.pages.release(r.slot)
+                    eng.slots[i] = None
+            eng.metrics.decode_rounds += 1
+        else:
+            eng.decode_round()
+        rounds += 1
+
+    m = eng.metrics
+    print(f"arch={cfg.name} rounds={m.decode_rounds} tokens={m.tokens_out} "
+          f"prefills={m.prefills} wall={time.time() - t0:.1f}s")
+    if runner is not None:
+        print(f"colocated finetune units executed: {units_done} "
+              f"(ft loss so far: {float(ft_state['loss']):.4f})")
+
+
+if __name__ == "__main__":
+    main()

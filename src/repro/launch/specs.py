@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No allocation anywhere: params/adapters/optimizer come from jax.eval_shape
+over the real initializers; batches/caches are constructed as structs.
+Modality frontends are STUBS per the assignment: ``vlm`` cells get
+precomputed patch embeddings, ``audio`` cells get precomputed frame
+embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.training import peft as P
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+Struct = jax.ShapeDtypeStruct
+
+AUDIO_DECODE_ENC_LEN = 2048   # cross-attention source length for decode cells
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: Struct(x.shape, x.dtype), tree)
+
+
+def param_structs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: MD.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def adapter_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: MD.init_adapters(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_structs(adapters):
+    return jax.eval_shape(lambda a: adamw_init(a), adapters)
+
+
+def _seq_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(text_tokens, frontend_len) so total context == seq_len."""
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        return seq_len - cfg.frontend_tokens, cfg.frontend_tokens
+    if cfg.enc_layers:                       # enc-dec: half frames, half text
+        return seq_len // 2, seq_len // 2
+    return seq_len, 0
+
+
+def train_batch_structs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B = cell.global_batch
+    S_text, front = _seq_split(cfg, cell.seq_len)
+    batch = {
+        "tokens": Struct((B, S_text), jnp.int32),
+        "labels": Struct((B, S_text), jnp.int32),
+        "mask": Struct((B, S_text), jnp.float32),
+    }
+    if cfg.frontend == "vision" and front:
+        batch["frontend"] = Struct((B, front, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers:
+        batch["enc_frames"] = Struct((B, front, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_structs(cfg: ModelConfig, cell: ShapeCell):
+    B = cell.global_batch
+    S_text, front = _seq_split(cfg, cell.seq_len)
+    batch = {"tokens": Struct((B, S_text), jnp.int32)}
+    if cfg.frontend == "vision" and front:
+        batch["frontend"] = Struct((B, front, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers:
+        batch["enc_frames"] = Struct((B, front, cfg.d_model), jnp.bfloat16)
+    enc_len = front if cfg.enc_layers else 0
+    cache = jax.eval_shape(
+        lambda: MD.init_cache(cfg, B, cell.seq_len, enc_len=enc_len))
+    return batch, cache
+
+
+def decode_structs(cfg: ModelConfig, cell: ShapeCell):
+    B = cell.global_batch
+    enc_len = AUDIO_DECODE_ENC_LEN if cfg.enc_layers else 0
+    cache = jax.eval_shape(
+        lambda: MD.init_cache(cfg, B, cell.seq_len, enc_len=enc_len))
+    tokens = Struct((B,), jnp.int32)
+    positions = Struct((B,), jnp.int32)
+    return tokens, positions, cache
+
+
+# ------------------------------------------------------------- step fns ---
+def make_cell_fn(cfg: ModelConfig, cell: ShapeCell, use_kernels: bool = False
+                 ) -> Tuple[Callable, Tuple[Any, ...]]:
+    """Returns (step_fn, arg_structs) for a dry-run cell.
+
+    train  -> PEFT train step (paper workload: LoRA finetune)
+    prefill-> prompt processing into a fresh cache
+    decode -> one serve_step token over a seq_len cache
+    """
+    if cell.kind == "train":
+        step = P.make_train_step(cfg, AdamWConfig(), use_kernels=False,
+                                 remat=True)
+        params = param_structs(cfg)
+        adapters = adapter_structs(cfg)
+        opt = opt_structs(adapters)
+        batch = train_batch_structs(cfg, cell)
+        return step, (params, adapters, opt, batch)
+    if cell.kind == "prefill":
+        batch, cache = prefill_structs(cfg, cell)
+
+        def step(params, batch, cache):
+            return MD.prefill(params, cfg, batch, cache)
+
+        return step, (param_structs(cfg), batch, cache)
+    # decode
+    tokens, positions, cache = decode_structs(cfg, cell)
+
+    def step(params, tokens, positions, cache):
+        return MD.decode_step(params, cfg, tokens, positions, cache)
+
+    return step, (param_structs(cfg), tokens, positions, cache)

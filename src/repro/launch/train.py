@@ -1,0 +1,106 @@
+"""PEFT finetune driver.
+
+Runs real training on CPU with reduced (smoke) configs, or lowers the full
+config for the production mesh (--dryrun goes through launch/dryrun.py
+instead). Demonstrates checkpoint/restart fault tolerance end to end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 20 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.distributed.fault_tolerance import CheckpointManager
+from repro.models import model as MD
+from repro.training import peft as P
+from repro.training.data import DataConfig, Prefetcher, SyntheticCorpus
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--layer-units", action="store_true",
+                    help="run via the layer-unit engine instead of the "
+                         "one-shot train step")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = MD.init_params(cfg, key)
+    adapters = MD.init_adapters(cfg, jax.random.PRNGKey(1))
+    opt_cfg = AdamWConfig(lr=args.lr)
+    opt = adamw_init(adapters)
+
+    dcfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        frontend_tokens=cfg.frontend_tokens if cfg.frontend == "vision" else 0,
+        enc_frames=args.seq // 2 if cfg.enc_layers else 0,
+        d_model=cfg.d_model)
+    data = SyntheticCorpus(dcfg).batches()
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        state = ckpt.restore({"adapters": adapters, "opt": opt})
+        adapters = jax.tree.map(jnp.asarray, state["adapters"])
+        opt = jax.tree.map(jnp.asarray, state["opt"])
+        start = ckpt.latest_step()
+        print(f"resumed from step {start}")
+
+    if args.layer_units:
+        pc = P.PeftConfig(micro_batch=args.batch, seq_len=args.seq, accum=1,
+                          opt=opt_cfg)
+        pf = Prefetcher(data, depth=pc.n_stage)
+        state = P.init_ft_state(cfg, pc, params, jax.random.PRNGKey(1),
+                                pf.stacked())
+        unit = jax.jit(P.make_unit_step(cfg, pc, params))
+        upi = P.units_per_iteration(cfg, pc.accum)
+        for step in range(start, args.steps):
+            t0 = time.time()
+            for _ in range(upi):
+                state = unit(state)
+            consumed = int(state["consumed"])
+            state["consumed"] = jnp.zeros((), jnp.int32)
+            pf.refill(consumed)
+            state["data"] = {k: jnp.asarray(v)
+                             for k, v in pf.stacked().items()}
+            print(f"step {step:4d} loss {float(state['last_loss']):.4f} "
+                  f"({time.time() - t0:.2f}s, {upi} units)")
+        return
+
+    train_step = jax.jit(P.make_train_step(cfg, opt_cfg, remat=True))
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        adapters, opt, metrics = train_step(params, adapters, opt, batch)
+        print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+              f"ce {float(metrics['ce']):.4f} ({time.time() - t0:.2f}s)")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"adapters": adapters, "opt": opt},
+                      blocking=False)
+    if ckpt:
+        ckpt.save(args.steps, {"adapters": adapters, "opt": opt})
+        ckpt.wait()
+        print(f"checkpoints at {sorted(ckpt.steps())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,405 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, flash attention (jnp).
+
+The chunked flash attention here is the *reference* implementation that the
+Pallas kernels are validated against, and is the production path for prefill /
+training (XLA fuses it well on TPU); decode uses kernels/decode_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs ----
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def glu_mlp(x, gate_w, up_w, down_w, act: str = "silu",
+            lora=None, lora_scale: float = 0.0):
+    """SwiGLU / GeGLU MLP with optional fused LoRA deltas.
+
+    lora: dict with optional keys gate/up/down -> (A: (d, r), B: (r, ff))."""
+    def proj(h, w, key, out_logical):
+        y = jnp.einsum("...d,df->...f", h, w.astype(h.dtype))
+        if lora is not None and key in lora:
+            a, b = lora[key]
+            y = y + lora_scale * jnp.einsum(
+                "...r,rf->...f", jnp.einsum("...d,dr->...r", h, a.astype(h.dtype)),
+                b.astype(h.dtype))
+        return constrain(y, out_logical) if y.ndim == 3 else y
+    g = proj(x, gate_w, "gate", ("batch", None, "ff"))
+    u = proj(x, up_w, "up", ("batch", None, "ff"))
+    h = _act(act)(g.astype(jnp.float32)).astype(x.dtype) * u
+    return proj(h, down_w, "down", ("batch", "seq_sp", None))
+
+
+# --------------------------------------------------- flash attention -------
+def flash_attention(
+    q: jax.Array,                # (B, Sq, H, hd)
+    k: jax.Array,                # (B, Sk, KV, hd)
+    v: jax.Array,                # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: Optional[jax.Array] = None,   # absolute pos of q[:,0] (decode/chunks)
+    window: int = 0,             # sliding-window size (0 = full)
+    soft_cap: float = 0.0,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention (GQA-aware), O(S) memory in BOTH
+    directions: a custom VJP recomputes the softmax blocks in the backward
+    pass (plain autodiff through the chunk scans would save O(S^2) weights
+    — observed as 20GiB/device buffers in the 32k-train dry-run).
+    """
+    B, Sq, H, hd = q.shape
+    scale_v = scale if scale is not None else hd ** -0.5
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32) + \
+            (k.shape[1] - Sq if causal else 0)
+    f = _make_flash(causal, window, float(soft_cap), float(scale_v),
+                    int(q_chunk), int(kv_chunk))
+    return f(q, k, v, q_offset)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal, window, soft_cap, scale, q_chunk, kv_chunk):
+    kw = dict(causal=causal, window=window, soft_cap=soft_cap, scale=scale,
+              q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    @jax.custom_vjp
+    def f(q, k, v, q_offset):
+        return _flash_fwd(q, k, v, q_offset, **kw)[0]
+
+    def fwd(q, k, v, q_offset):
+        o, lse = _flash_fwd(q, k, v, q_offset, **kw)
+        return o, (q, k, v, q_offset, o, lse)
+
+    def bwd(res, do):
+        q, k, v, q_offset, o, lse = res
+        dq, dk, dv = _flash_bwd(q, k, v, q_offset, o, lse, do, **kw)
+        return dq, dk, dv, jnp.zeros_like(q_offset)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _flash_fwd(q, k, v, q_offset, *, causal, window, soft_cap, scale,
+               q_chunk, kv_chunk):
+    """Returns (o (B,Sq,H,vd), lse (B,KV,g,Sq) fp32)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]                       # value head dim may differ (MLA)
+    g = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32) + (Sk - Sq if causal else 0)
+
+    q = q.reshape(B, Sq, KV, g, hd)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    n_q = -(-Sq // q_chunk)
+    n_kv = -(-Sk // kv_chunk)
+    # Pad sequence dims to chunk multiples.
+    q = _pad_seq(q, n_q * q_chunk, 1)
+    k = _pad_seq(k, n_kv * kv_chunk, 1)
+    v = _pad_seq(v, n_kv * kv_chunk, 1)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        q_pos = q_offset[:, None] + qi * q_chunk + jnp.arange(q_chunk)[None, :]  # (B, qc)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if soft_cap > 0.0:
+                s = soft_cap * jnp.tanh(s / soft_cap)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.broadcast_to((kpos < Sk)[None, None, :],
+                                    (B, q_chunk, kv_chunk))
+            if causal:
+                mask = mask & (kpos[None, None, :] <= q_pos[:, :, None])
+            if window > 0:
+                mask = mask & (kpos[None, None, :] > q_pos[:, :, None] - window)
+            s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # keep v in its storage dtype (see decode_attn_ref note: an
+            # .astype(f32) here becomes a hoisted full-cache f32 copy)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        init = (
+            jnp.full((B, KV, g, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, KV, g, q_chunk), jnp.float32),
+            jnp.zeros((B, KV, g, q_chunk, vd), jnp.float32),
+        )
+        (m, l, o), _ = jax.lax.scan(kv_block, init, jnp.arange(n_kv))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+        o = jnp.moveaxis(o, 3, 1)                        # (B, qc, KV, g, vd)
+        return carry, (o.astype(v.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, jnp.arange(n_q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_q * q_chunk, KV, g, vd)
+    # lses: (n_q, B, KV, g, qc) -> (B, KV, g, Sq)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, g, n_q * q_chunk)
+    return out[:, :Sq].reshape(B, Sq, H, vd), lse[..., :Sq]
+
+
+def _flash_bwd(q, k, v, q_offset, o, lse, do, *, causal, window, soft_cap,
+               scale, q_chunk, kv_chunk):
+    """Recompute-based flash backward (dq, dk, dv), O(S) memory.
+
+    Standard algorithm: per (q-block, kv-block) recompute p from q,k and the
+    saved LSE; then
+        dv += p^T do ;  dp = do v^T ;  ds = p*(dp - D)  (D = rowsum(do*o)) ;
+        [soft-cap chain rule: ds *= 1 - (s_capped/cap)^2] ;
+        dq += ds k ;  dk += ds^T q.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]
+    g = H // KV
+    in_dtype = q.dtype
+    qr = q.reshape(B, Sq, KV, g, hd)
+    dor = do.reshape(B, Sq, KV, g, vd)
+    orr = o.reshape(B, Sq, KV, g, vd)
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    n_q = -(-Sq // qc)
+    n_kv = -(-Sk // kc)
+    qr = _pad_seq(qr, n_q * qc, 1)
+    dor = _pad_seq(dor, n_q * qc, 1)
+    orr = _pad_seq(orr, n_q * qc, 1)
+    kp = _pad_seq(k, n_kv * kc, 1)
+    vp = _pad_seq(v, n_kv * kc, 1)
+    lse_p = _pad_seq(lse, n_q * qc, 3)   # (B, KV, g, Sq_pad); pad rows = 0
+    D = jnp.sum(dor.astype(jnp.float32) * orr.astype(jnp.float32),
+                axis=-1)                  # (B, Sq_pad, KV, g)
+
+    def recompute_s(qb, kb, q_pos, kpos):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        cap_grad = 1.0
+        if soft_cap > 0.0:
+            t = jnp.tanh(s / soft_cap)
+            s = soft_cap * t
+            cap_grad = 1.0 - t * t
+        mask = jnp.broadcast_to((kpos < Sk)[None, None, :],
+                                (B, qb.shape[1], kpos.shape[0]))
+        if causal:
+            mask = mask & (kpos[None, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            mask = mask & (kpos[None, None, :] > q_pos[:, :, None] - window)
+        return s, cap_grad, mask
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = jax.lax.dynamic_slice_in_dim(qr, qi * qc, qc, 1)
+        dob = jax.lax.dynamic_slice_in_dim(dor, qi * qc, qc, 1
+                                           ).astype(jnp.float32)
+        lseb = jax.lax.dynamic_slice_in_dim(lse_p, qi * qc, qc, 3)
+        Db = jax.lax.dynamic_slice_in_dim(D, qi * qc, qc, 1)  # (B,qc,KV,g)
+        q_pos = q_offset[:, None] + qi * qc + jnp.arange(qc)[None, :]
+
+        def kv_block(acc, ki):
+            dq_b, dk_a, dv_a = acc
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * kc, kc, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * kc, kc, 1)
+            kpos = ki * kc + jnp.arange(kc)
+            s, cap_grad, mask = recompute_s(qb, kb, q_pos, kpos)
+            lse_safe = jnp.where(jnp.isneginf(lseb), 0.0, lseb)
+            p = jnp.exp(s - lse_safe[..., None])          # (B,KV,g,qc,kvc)
+            p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+            p = jnp.where(jnp.isneginf(lseb)[..., None], 0.0, p)
+            # padded q rows (lse padding is zeros, not -inf) must not leak
+            # into dk/dv
+            qvalid = (qi * qc + jnp.arange(qc)) < Sq
+            p = p * qvalid[None, None, None, :, None]
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - jnp.moveaxis(Db, 1, 3)[..., None]) * cap_grad
+            dq_b = dq_b + jnp.einsum(
+                "bkgqs,bskh->bqkgh", ds.astype(in_dtype), kb,
+                preferred_element_type=jnp.float32) * scale
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, ki * kc, kc, 1)
+                + jnp.einsum("bkgqs,bqkgh->bskh", ds.astype(in_dtype), qb,
+                             preferred_element_type=jnp.float32) * scale,
+                ki * kc, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, ki * kc, kc, 1)
+                + jnp.einsum("bkgqs,bqkgh->bskh", p.astype(in_dtype), dob,
+                             preferred_element_type=jnp.float32),
+                ki * kc, 1)
+            return (dq_b, dk_a, dv_a), None
+
+        dq_init = jnp.zeros((B, qc, KV, g, hd), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_block, (dq_init, dk_acc, dv_acc), jnp.arange(n_kv))
+        return (dk_acc, dv_acc), dq_b.astype(in_dtype)
+
+    dk0 = jnp.zeros((B, n_kv * kc, KV, hd), jnp.float32)
+    dv0 = jnp.zeros((B, n_kv * kc, KV, vd), jnp.float32)
+    (dk_f, dv_f), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(n_q))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, n_q * qc, KV, g, hd)
+    dq = dq[:, :Sq].reshape(B, Sq, H, hd).astype(in_dtype)
+    dk = dk_f[:, :Sk].astype(in_dtype)
+    dv = dv_f[:, :Sk].astype(in_dtype)
+    return dq, dk, dv
+
+
+def _pad_seq(x, target, axis):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, soft_cap=0.0,
+                  q_offset=None, scale=None):
+    """Dense O(S^2) oracle used by tests."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]
+    g = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32) + (Sk - Sq if causal else 0)
+    qr = q.reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if soft_cap > 0.0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None]
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((B, Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, vd).astype(v.dtype)
+
+
+# ------------------------------------------------------------ embeddings ---
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return out
+
+
+def lm_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """x: (B, S, d); table: (V, d) -> logits (B, S, V) (vocab TP-shardable)."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def chunked_softmax_xent(x: jax.Array, table: jax.Array, labels: jax.Array,
+                         mask=None, chunk: int = 256):
+    """Fused final-projection + cross-entropy over sequence chunks.
+
+    Never materializes (B, S, V): each chunk computes its logits, LSE and
+    gold score, and the chunk body is rematerialized in backward. Essential
+    when V doesn't shard (seamless: 256206 on a 16-way axis -> a replicated
+    537GB logits tensor otherwise).
+
+    x: (B, S, d) FINAL hidden states (already normed, already shifted);
+    labels: (B, S) aligned with x."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    n = -(-S // c)
+    xp = _pad_seq(x, n * c, 1)
+    lp = _pad_seq(labels, n * c, 1)
+    mp = jnp.ones((B, n * c), jnp.float32) if mask is None else \
+        _pad_seq(mask.astype(jnp.float32), n * c, 1)
+    mp = mp * (jnp.arange(n * c)[None, :] < S)
+
+    @jax.checkpoint
+    def body(carry, i):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(xp, i * c, c, 1)
+        ls = jax.lax.dynamic_slice_in_dim(lp, i * c, c, 1)
+        ms = jax.lax.dynamic_slice_in_dim(mp, i * c, c, 1)
+        logits = jnp.einsum("bsd,vd->bsv", xs, table.astype(xs.dtype)
+                            ).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - gold) * ms)
+        cnt = cnt + jnp.sum(ms)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block layout (Griffin "recurrent block"):
+    x -> branch A: linear(d->w) -> GeLU
+      -> branch B: linear(d->w) -> causal conv1d(width 4) -> RG-LRU
+    out = (A * B_rglru) @ out_proj
+
+RG-LRU (per channel, diagonal recurrence):
+    r_t = sigmoid(block_diag_linear_a(x_t))        recurrence gate
+    i_t = sigmoid(block_diag_linear_x(x_t))        input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))       in (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/train uses an associative scan (parallel on TPU); decode is O(1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_C = 8.0
+_NUM_BLOCKS = 16
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    nb = _NUM_BLOCKS if w % _NUM_BLOCKS == 0 else 1
+    bs = w // nb
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_y": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "in_x": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": (jax.random.normal(ks[3], (nb, bs, bs)) * bs ** -0.5
+                   ).astype(dtype),
+        "gate_x": (jax.random.normal(ks[4], (nb, bs, bs)) * bs ** -0.5
+                   ).astype(dtype),
+        "lamb": jnp.linspace(-4.0, 4.0, w).astype(jnp.float32),   # Lambda param
+        "out_proj": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dtype),
+    }
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int) -> Dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), jnp.bfloat16),
+    }
+
+
+def _block_diag(x, w):
+    """x: (..., W) with W = nb*bs; w: (nb, bs, bs)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return y.reshape(*x.shape[:-1], nb * bs)
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(_block_diag(xb, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xb, p["gate_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lamb"]) * r           # (..., w), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xb.astype(jnp.float32)
+
+
+def rglru_forward(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                  state: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d) -> (out, new_state)."""
+    B, S, d = x.shape
+    y_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["in_y"].astype(x.dtype))
+        .astype(jnp.float32)).astype(x.dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(x.dtype))
+
+    # causal conv1d width 4
+    pad = (jnp.zeros((B, 3, xb.shape[-1]), xb.dtype) if state is None
+           else state["conv"].astype(xb.dtype))
+    xp = jnp.concatenate([pad, xb], axis=1)
+    conv = sum(xp[:, i:i + S] * p["conv_w"][i].astype(xb.dtype)
+               for i in range(4)) + p["conv_b"].astype(xb.dtype)
+
+    a, bx = _gates(p, conv)                                # (B,S,w) f32
+
+    # h_t = a_t h_{t-1} + bx_t  via associative scan
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if state is not None:
+        # fold h0 in as a virtual step 0
+        a0 = jnp.ones((B, 1, a.shape[-1]), jnp.float32)
+        a_ = jnp.concatenate([a0, a], axis=1)
+        b_ = jnp.concatenate([state["h"][:, None], bx], axis=1)
+        aa, hh = jax.lax.associative_scan(comb, (a_, b_), axis=1)
+        h = hh[:, 1:]
+    else:
+        aa, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+
+    out = jnp.einsum("bsw,wd->bsd",
+                     (y_branch.astype(jnp.float32) * h).astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1], "conv": xp[:, S:].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def rglru_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d). O(1) recurrent update."""
+    B = x.shape[0]
+    y_branch = jax.nn.gelu(
+        (x[:, 0] @ p["in_y"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    xb = x[:, 0] @ p["in_x"].astype(x.dtype)
+    buf = jnp.concatenate([state["conv"].astype(xb.dtype), xb[:, None]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", buf, p["conv_w"].astype(xb.dtype))
+    conv = conv + p["conv_b"].astype(xb.dtype)
+    a, bx = _gates(p, conv)
+    h = a * state["h"] + bx
+    out = ((y_branch.astype(jnp.float32) * h).astype(x.dtype)
+           @ p["out_proj"].astype(x.dtype))
+    return out[:, None], {"h": h, "conv": buf[:, 1:].astype(jnp.bfloat16)}

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk recurrence); decode is the O(1)-per-token recurrent update that
+makes SSM decode the most bandwidth-bound workload in the zoo (the Harli
+harvesting margin is largest here).
+
+The intra-chunk quadratic form is the compute hot-spot — a Pallas kernel in
+kernels/ssd_scan.py implements it; `ssd_chunked` below is the jnp reference
+(and CPU path).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    dinner, ds, nh = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads
+    convdim = dinner + 2 * ds
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * dinner + 2 * ds + nh)) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, convdim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((convdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((dinner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (dinner, d)) * dinner ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    dinner, ds, nh, hd = (cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads,
+                          cfg.ssm_headdim)
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, dinner + 2 * ds),
+                          jnp.bfloat16),
+    }
+
+
+def _split_proj(p, x, cfg):
+    dinner, ds, nh = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads
+    zxbcdt = jnp.einsum("...d,do->...o", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :dinner]
+    xbc = zxbcdt[..., dinner:dinner + dinner + 2 * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def ssm_prefill(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                state: Optional[Dict] = None,
+                use_kernel: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d). Returns (y, final_state)."""
+    B, S, d = x.shape
+    dinner, ds, nh, hd = (cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads,
+                          cfg.ssm_headdim)
+    z, xbc, dt = _split_proj(p, x, cfg)
+
+    # causal depthwise conv1d, width w
+    w = cfg.ssm_conv_width
+    pad = jnp.zeros((B, w - 1, xbc.shape[-1]), xbc.dtype) if state is None \
+        else state["conv"].astype(xbc.dtype)
+    xbc_p = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_p[:, i:i + S] * p["conv_w"][i].astype(xbc.dtype)
+               for i in range(w)) + p["conv_b"].astype(xbc.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs = conv[..., :dinner].reshape(B, S, nh, hd)
+    Bt = conv[..., dinner:dinner + ds]
+    Ct = conv[..., dinner + ds:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    h0 = None if state is None else state["h"]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, hT = kops.ssd_scan(xs, dt, A, Bt, Ct, cfg.ssm_chunk, h0=h0)
+    else:
+        y, hT = ssd_chunked(xs, dt, A, Bt, Ct, cfg.ssm_chunk, h0=h0)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, S, dinner).astype(x.dtype)
+
+    # gated RMSNorm then out-projection
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,do->bso", y, p["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"h": hT,
+                     "conv": xbc_p[:, S:].astype(state["conv"].dtype)}
+    return out, new_state
+
+
+def ssd_chunked(xs, dt, A, Bt, Ct, chunk: int, h0=None):
+    """Reference chunked SSD.
+
+    xs: (B,S,nh,hd) dt: (B,S,nh) A: (nh,) Bt/Ct: (B,S,ds)
+    Returns y: (B,S,nh,hd) float32, hT: (B,nh,hd,ds) float32.
+    """
+    B, S, nh, hd = xs.shape
+    ds = Bt.shape[-1]
+    c = min(chunk, S)
+    n = -(-S // c)
+    pad = n * c - S
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    xs = xs.reshape(B, n, c, nh, hd).astype(jnp.float32)
+    dt = dt.reshape(B, n, c, nh)
+    Bt = Bt.reshape(B, n, c, ds).astype(jnp.float32)
+    Ct = Ct.reshape(B, n, c, ds).astype(jnp.float32)
+
+    la = dt * A[None, None, None, :]              # log decay per step (B,n,c,nh)
+    cum = jnp.cumsum(la, axis=2)                  # inclusive cumsum
+
+    # intra-chunk quadratic form: y[i] = sum_{j<=i} C_i.B_j exp(cum_i-cum_j) dt_j x_j
+    scores = jnp.einsum("bncs,bnms->bncm", Ct, Bt)             # (B,n,c,c)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,n,c,c,nh)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, -jnp.inf)
+    M = scores[..., None] * jnp.exp(decay)                     # (B,n,c,c,nh)
+    M = jnp.where(causal[None, None, :, :, None], M, 0.0)
+    y_intra = jnp.einsum("bncmh,bnmh,bnmhp->bnchp", M, dt, xs)
+
+    # chunk-final states: h_n = sum_j exp(cum_end - cum_j) dt_j x_j B_j^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,n,c,nh)
+    hc = jnp.einsum("bnch,bnch,bnchp,bncs->bnhps", dec_end, dt, xs, Bt)
+
+    # inter-chunk recurrence over n chunks
+    a_chunk = jnp.exp(cum[:, :, -1, :])                        # (B,n,nh)
+    h_init = (jnp.zeros((B, nh, hd, ds), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        a, hcn, Cn, cumn = inp
+        y_in = jnp.einsum("bcs,bhps,bch->bchp", Cn, h, jnp.exp(cumn))
+        h_new = a[:, :, None, None] * h + hcn
+        return h_new, y_in
+
+    xs_scan = (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(hc, 1, 0),
+               jnp.moveaxis(Ct, 1, 0), jnp.moveaxis(cum, 1, 0))
+    hT, y_inter = jax.lax.scan(step, h_init, xs_scan)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                      # (B,n,c,nh,hd)
+    y = (y_intra + y_inter).reshape(B, n * c, nh, hd)
+    # padding contributes dt=0 (no state update, decay 1) so hT is exact
+    return y[:, :S], hT
+
+
+def ssm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent update. x: (B, 1, d)."""
+    B = x.shape[0]
+    dinner, ds, nh, hd = (cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads,
+                          cfg.ssm_headdim)
+    z, xbc, dt = _split_proj(p, x[:, 0], cfg)
+
+    conv_buf = jnp.concatenate(
+        [state["conv"].astype(xbc.dtype), xbc[:, None]], axis=1)  # (B, w, cd)
+    conv = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"].astype(xbc.dtype))
+    conv = conv + p["conv_b"].astype(xbc.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xsv = conv[..., :dinner].reshape(B, nh, hd).astype(jnp.float32)
+    Btv = conv[..., dinner:dinner + ds].astype(jnp.float32)
+    Ctv = conv[..., dinner + ds:].astype(jnp.float32)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, nh)
+    a = jnp.exp(dtv * (-jnp.exp(p["A_log"])))                      # (B, nh)
+    h = state["h"]
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhp,bs->bhps", dtv, xsv, Btv)
+    y = jnp.einsum("bs,bhps->bhp", Ctv, h) + xsv * p["D"][None, :, None]
+    y = y.reshape(B, dinner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"h": h, "conv": conv_buf[:, 1:].astype(state["conv"].dtype)}

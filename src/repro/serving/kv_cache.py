@@ -1,0 +1,169 @@
+"""Paged KV-cache pool (the serving-side half of Harli's unified allocator).
+
+Layout mirrors the paper's §4.2 two-level organisation on TPU terms:
+  * the *pool* is one pre-allocated array of pages:
+      kv_pages: (n_layers, 2, num_pages, page_tokens, kv_heads, head_dim)
+  * a *page table* per request maps logical token blocks -> physical pages
+  * page accounting (which pages are free / owned by KV / lent to the
+    finetune window) lives in core/allocator.py — this module is the
+    mechanical pool + gather/scatter paths.
+
+The per-slot "dense" cache used by model.decode_step is the degenerate case
+page_tokens == S_max with one page per slot; the paged path below is what the
+Pallas decode kernel consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class PagePoolSpec:
+    n_layers: int
+    num_pages: int
+    page_tokens: int
+    kv_heads: int
+    head_dim: int
+    dtype: object = jnp.bfloat16
+
+    @property
+    def page_bytes(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return (self.n_layers * 2 * self.page_tokens * self.kv_heads
+                * self.head_dim * itemsize)
+
+    def alloc(self) -> jax.Array:
+        return jnp.zeros((self.n_layers, 2, self.num_pages, self.page_tokens,
+                          self.kv_heads, self.head_dim), self.dtype)
+
+
+def spec_for(cfg: ModelConfig, num_pages: int, page_tokens: int = 16
+             ) -> PagePoolSpec:
+    return PagePoolSpec(
+        n_layers=len(cfg.attn_layer_indices()) or 1,
+        num_pages=num_pages, page_tokens=page_tokens,
+        kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim)
+
+
+class PageTableManager:
+    """Host-side page tables: request -> list of physical pages.
+
+    Allocation order is FIFO over a free list; the unified allocator may
+    shrink the usable region (lending pages to the finetune window), which
+    is enforced here via ``set_usable``.
+    """
+
+    def __init__(self, spec: PagePoolSpec, max_slots: int,
+                 max_pages_per_seq: int):
+        self.spec = spec
+        self.max_slots = max_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        self.free: List[int] = list(range(spec.num_pages))
+        self.usable = spec.num_pages
+        self.tables: Dict[int, List[int]] = {}      # slot -> pages
+        self.lengths: Dict[int, int] = {}           # slot -> tokens stored
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.spec.num_pages - len(self.free)
+
+    def set_usable(self, usable_pages: int) -> None:
+        """Unified-allocator hook: cap how many pages KV may occupy."""
+        self.usable = usable_pages
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        need = self._pages_needed(n_tokens)
+        return (self.pages_in_use + need) <= self.usable and \
+            len(self.free) >= need
+
+    def _pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.spec.page_tokens)
+
+    # -- lifecycle ---------------------------------------------------------
+    def admit(self, slot: int, prompt_len: int) -> bool:
+        need = self._pages_needed(prompt_len)
+        if not self.can_alloc(prompt_len) or slot in self.tables:
+            return False
+        self.tables[slot] = [self.free.pop() for _ in range(need)]
+        self.lengths[slot] = prompt_len
+        return True
+
+    def extend(self, slot: int, n_tokens: int = 1) -> bool:
+        """Grow a sequence; allocates a new page on boundary crossings."""
+        cur = self.lengths[slot]
+        need = self._pages_needed(cur + n_tokens) - len(self.tables[slot])
+        if need > 0:
+            if len(self.free) < need or \
+                    self.pages_in_use + need > self.usable:
+                return False
+            self.tables[slot] += [self.free.pop() for _ in range(need)]
+        self.lengths[slot] = cur + n_tokens
+        return True
+
+    def release(self, slot: int) -> None:
+        self.free.extend(self.tables.pop(slot, []))
+        self.lengths.pop(slot, None)
+
+    def table_array(self, slots: List[int]) -> np.ndarray:
+        """(len(slots), max_pages_per_seq) int32, -1 padded."""
+        out = np.full((len(slots), self.max_pages_per_seq), -1, np.int32)
+        for i, s in enumerate(slots):
+            pages = self.tables.get(s, [])
+            out[i, :len(pages)] = pages
+        return out
+
+
+# ------------------------------------------------------- paged gather ops --
+def paged_read(pool: jax.Array, page_table: jax.Array, layer: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Gather a layer's K/V for a batch.
+
+    pool: (L, 2, P, pt, KV, hd); page_table: (B, n_pages) int32 (-1 pad).
+    Returns k, v: (B, n_pages*pt, KV, hd); padded pages read page 0 but are
+    masked by kv_pos logic downstream.
+    """
+    pt = jnp.maximum(page_table, 0)
+    k = pool[layer, 0][pt]                     # (B, n_pages, ptok, KV, hd)
+    v = pool[layer, 1][pt]
+    B, n_pages, ptok, KV, hd = k.shape
+    return (k.reshape(B, n_pages * ptok, KV, hd),
+            v.reshape(B, n_pages * ptok, KV, hd))
+
+
+def paged_write(pool: jax.Array, page_table: jax.Array, layer: int,
+                positions: jax.Array, k_new: jax.Array, v_new: jax.Array
+                ) -> jax.Array:
+    """Scatter one token per request into the pool.
+
+    positions: (B,) absolute token index; k_new/v_new: (B, KV, hd)."""
+    ptok = pool.shape[3]
+    page_idx = positions // ptok
+    slot_in_page = positions % ptok
+    B = positions.shape[0]
+    phys = jnp.take_along_axis(jnp.maximum(page_table, 0),
+                               page_idx[:, None], axis=1)[:, 0]
+    pool = pool.at[layer, 0, phys, slot_in_page].set(
+        k_new.astype(pool.dtype))
+    pool = pool.at[layer, 1, phys, slot_in_page].set(
+        v_new.astype(pool.dtype))
+    return pool
+
+
+def kv_positions(page_table: jax.Array, lengths: jax.Array, page_tokens: int
+                 ) -> jax.Array:
+    """(B, n_pages*pt) absolute positions for gathered caches (-1 invalid)."""
+    B, n_pages = page_table.shape
+    logical = (jnp.arange(n_pages * page_tokens)[None, :]
+               .astype(jnp.int32))                     # position if contiguous
+    valid = (logical < lengths[:, None]) & \
+        (jnp.repeat(page_table, page_tokens, axis=1) >= 0)
+    return jnp.where(valid, logical, -1)

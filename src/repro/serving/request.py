@@ -1,0 +1,57 @@
+"""Request and batch bookkeeping for the disaggregated serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float                 # seconds since trace start
+    prompt_len: int
+    max_new_tokens: int
+    phase: Phase = Phase.QUEUED
+    slot: int = -1                 # decode slot index (-1 = unassigned)
+    generated: int = 0
+    prefill_done: float = -1.0     # time prefill finished (TTFT component)
+    finish: float = -1.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    def tpot_samples(self) -> List[float]:
+        """Per-output-token latencies (decode QoS metric)."""
+        ts = self.token_times
+        return [ts[i] - ts[i - 1] for i in range(1, len(ts))]
+
+
+@dataclasses.dataclass
+class DecodeBatch:
+    """One decode round over the active slots."""
+    requests: List[Request]
+
+    @property
+    def bs(self) -> int:
+        return len(self.requests)
+
+    @property
+    def mean_context(self) -> float:
+        if not self.requests:
+            return 0.0
+        return sum(r.context_len for r in self.requests) / len(self.requests)
+
+    @property
+    def max_context(self) -> int:
+        return max((r.context_len for r in self.requests), default=0)

@@ -1,0 +1,68 @@
+"""AdamW on pytrees (adapter-only in the PEFT setting), plus schedules.
+
+No optax dependency — the optimizer state must embed inside the layer-unit
+state machine (core/colocation.py), so it is a plain pytree with pure
+functional updates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 10
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(cfg: AdamWConfig, t) -> jax.Array:
+    t = t.astype(jnp.float32)
+    warm = jnp.minimum(t / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves) + 1e-12)
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    t = state["t"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                     state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** tf
+    bc2 = 1 - cfg.b2 ** tf
+    lr = lr_at(cfg, t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}

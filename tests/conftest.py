@@ -1,0 +1,21 @@
+import os
+
+# Tests run single-device (the dry-run is the ONLY place that forces 512
+# placeholder devices — per the assignment, never set that globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,117 @@
+"""Unified memory allocator + buddy pool invariants (hypothesis-driven)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+from repro.core.buddy import BuddyAllocator
+
+
+# ----------------------------------------------------------------- buddy --
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                          st.integers(1, 64 * 2048)), min_size=1,
+                max_size=120))
+def test_buddy_invariants(ops):
+    b = BuddyAllocator(256 * 2048)
+    live = []
+    for op, size in ops:
+        if op == "alloc":
+            off = b.alloc(size)
+            if off is not None:
+                # no overlap with any live block
+                lvl = b.allocated[off]
+                end = off + b.block_size(lvl)
+                for o2 in live:
+                    l2 = b.allocated[o2]
+                    e2 = o2 + b.block_size(l2)
+                    assert end <= o2 or e2 <= off, "overlap"
+                live.append(off)
+        elif live:
+            b.freeb(live.pop())
+        b.check_invariants()
+    for off in live:
+        b.freeb(off)
+    b.check_invariants()
+    assert b.allocated_bytes == 0
+    # fully coalesced back to a single block
+    assert b.fragmentation_bytes == 0
+
+
+def test_buddy_exhaustion_and_reuse():
+    b = BuddyAllocator(8 * 2048)
+    offs = [b.alloc(2048) for _ in range(8)]
+    assert all(o is not None for o in offs)
+    assert b.alloc(1) is None
+    b.freeb(offs[3])
+    assert b.alloc(2048) is not None
+
+
+# --------------------------------------------------------------- unified --
+def _alloc(total_gb=16, layers=32, kv=128 * 1024, swap=0.004):
+    return UnifiedAllocator(AllocatorConfig(
+        total_bytes=total_gb * 1024 ** 3, n_layers=layers,
+        kv_bytes_per_token=kv, max_bs=64, qos_s=0.040, swap_time_s=swap,
+        small_pool_bytes=256 * 1024 ** 2))
+
+
+def test_reserved_headroom_formula():
+    a = _alloc()
+    # Mem_reserved = (T/QoS) * max_bs * Mem_kv  (paper §4.4)
+    tokens = math.ceil(0.004 / 0.040 * 64)
+    expect = max(math.ceil(tokens * 128 * 1024 / a.chunk_bytes), 1)
+    assert a.reserved_chunks == expect
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["kv+", "kv-", "win"]),
+                          st.integers(1, 40_000)), min_size=1, max_size=80))
+def test_unified_invariants(ops):
+    a = _alloc()
+    for op, n in ops:
+        if op == "kv+":
+            a.kv_alloc_tokens(n)
+        elif op == "kv-":
+            a.kv_free_tokens(n)
+        else:
+            a.resize_window(n % (a.total_chunks + 1))
+        a.check_invariants()
+        # budget conservation
+        assert a.kv_chunks + a.window_chunks + a.free_chunks \
+            == a.total_chunks
+        # window never eats the reserve
+        assert a.window_chunks <= max(
+            a.total_chunks - a.kv_chunks - 0, a.total_chunks)
+
+
+def test_kv_pressure_reclaims_window():
+    a = _alloc()
+    a.resize_window(a.window_capacity_chunks())
+    w0 = a.window_chunks
+    assert w0 > 0
+    # fill KV beyond free space: the window must be reclaimed, not fail
+    tokens = (a.free_chunks + w0 // 2) * a.tokens_per_chunk
+    assert a.kv_alloc_tokens(tokens)
+    assert a.window_chunks < w0
+    assert a.reclaims > 0
+    a.check_invariants()
+
+
+def test_kv_alloc_fails_only_when_oom():
+    a = _alloc()
+    total_tokens = a.total_chunks * a.tokens_per_chunk
+    assert a.kv_alloc_tokens(total_tokens)       # fill everything
+    assert not a.kv_alloc_tokens(a.tokens_per_chunk + 1)
+    a.kv_free_tokens(2 * a.tokens_per_chunk)
+    assert a.kv_alloc_tokens(a.tokens_per_chunk)
+
+
+def test_window_capacity_respects_reserve():
+    a = _alloc()
+    cap = a.window_capacity_chunks()
+    assert cap == a.total_chunks - a.reserved_chunks
+    a.kv_alloc_tokens(10 * a.tokens_per_chunk)
+    assert a.window_capacity_chunks() == \
+        a.total_chunks - a.kv_chunks - a.reserved_chunks

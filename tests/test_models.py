@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: every assigned arch (reduced config) runs
+one forward, one PEFT train step, and one decode step on CPU with shape and
+finiteness asserts. Full configs are exercised only by the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, smoke_config
+from repro.models import model as MD
+from repro.training import peft as P
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+ALL = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+def _batch(cfg, key, B=2, S=12):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        b["frontend"] = jax.random.normal(key, (B, cfg.frontend_tokens,
+                                                cfg.d_model))
+    if cfg.enc_layers:
+        b["enc_frames"] = jax.random.normal(key, (B, 6, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_arch_smoke(arch, key):
+    cfg = smoke_config(arch)
+    params = MD.init_params(cfg, key)
+    adapters = MD.init_adapters(cfg, key)
+    batch = _batch(cfg, key)
+    B, S = batch["tokens"].shape
+
+    # forward
+    logits, aux = jax.jit(
+        lambda p, a, b: MD.forward(p, cfg, b, adapters=a))(
+        params, adapters, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    # one PEFT train step (adapters-only grads)
+    step = jax.jit(P.make_train_step(cfg, AdamWConfig(lr=1e-3), remat=True))
+    ad2, opt2, metrics = step(params, adapters, adamw_init(adapters), batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    # adapters must actually move
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(adapters),
+                                jax.tree.leaves(ad2)))
+    assert delta > 0, f"{arch}: adapters did not update"
+
+    # prefill + decode step
+    enc_len = batch["enc_frames"].shape[1] if "enc_frames" in batch else 0
+    front = batch["frontend"].shape[1] if "frontend" in batch else 0
+    cache = MD.init_cache(cfg, B, S + front + 4, enc_len=enc_len)
+    last, cache = jax.jit(lambda p, b, c: MD.prefill(p, cfg, b, c))(
+        params, {k: v for k, v in batch.items() if k != "labels"}, cache)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S + front, jnp.int32)
+    lg, cache = jax.jit(lambda p, t, q, c: MD.decode_step(p, cfg, t, q, c))(
+        params, tok, pos, cache)
+    assert lg.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_param_count_formula(arch, key):
+    """Analytic param_count must match actual initialization exactly."""
+    cfg = smoke_config(arch)
+    params = MD.init_params(cfg, key)
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    # formula excludes the MTP head (extra trunk) — subtract it when present
+    if cfg.mtp and "mtp" in params:
+        actual -= sum(int(np.prod(x.shape))
+                      for x in jax.tree.leaves(params["mtp"]))
+    expected = cfg.param_count()
+    assert abs(actual - expected) / max(expected, 1) < 0.02, \
+        f"{arch}: init {actual} vs formula {expected}"
+
+
+def test_moe_routing_deterministic(key):
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                      moe=True, num_experts=4, top_k=2, moe_d_ff=32)
+    params = MD.init_params(cfg, key)
+    b = _batch(cfg, key)
+    l1, _ = MD.forward(params, cfg, b)
+    l2, _ = MD.forward(params, cfg, b)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_moe_no_drop_high_capacity(key):
+    from repro.models import moe as M
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                      moe=True, num_experts=4, top_k=2, moe_d_ff=32,
+                      capacity_factor=4.0)
+    p = M.moe_init(key, cfg)
+    x = jax.random.normal(key, (2, 16, 32), jnp.float32)
+    y, aux = M.moe_forward(p, x, cfg)
+    assert float(aux["dropped_frac"]) == 0.0
+    assert y.shape == x.shape
+
+
+def test_lora_zero_init_is_identity(key):
+    """B=0 at init: adapters must not change the forward pass."""
+    cfg = smoke_config("qwen3-8b")
+    params = MD.init_params(cfg, key)
+    adapters = MD.init_adapters(cfg, key)
+    batch = _batch(cfg, key)
+    l0, _ = MD.forward(params, cfg, batch, adapters=None)
+    l1, _ = MD.forward(params, cfg, batch, adapters=adapters)
+    np.testing.assert_allclose(np.asarray(l0, np.float32),
+                               np.asarray(l1, np.float32), atol=1e-6)

@@ -1,0 +1,135 @@
+"""Sharded-execution correctness + dry-run machinery.
+
+The numerical test runs in a subprocess with 8 forced host devices (the
+assignment forbids setting the device-count flag globally): a smoke model's
+train step jitted with the production sharding rules on a 2x4 mesh must
+match the single-device result.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.configs import SHAPES, cells
+
+SRC = str(Path(__file__).parents[1] / "src")
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from repro.configs import smoke_config
+from repro.distributed import partitioning as PT
+from repro.distributed.sharding import use_mesh
+from repro.models import model as MD
+from repro.training import peft as P
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+cfg = smoke_config("%ARCH%")
+key = jax.random.PRNGKey(0)
+params = MD.init_params(cfg, key)
+adapters = MD.init_adapters(cfg, key)
+opt = adamw_init(adapters)
+B, S = 8, 16
+batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+if cfg.enc_layers:
+    batch["enc_frames"] = jax.random.normal(key, (B, 8, cfg.d_model))
+
+step = P.make_train_step(cfg, AdamWConfig(lr=1e-3), remat=True)
+# single-device reference
+ad_ref, _, m_ref = jax.jit(step)(params, adapters, opt, batch)
+
+mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+shardings = (PT.param_specs(cfg, params, mesh),
+             PT.adapter_specs(cfg, adapters, mesh),
+             jax.tree.map(lambda _: jax.sharding.PartitionSpec(), opt),
+             PT.batch_specs(batch, mesh))
+named = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                     shardings,
+                     is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+with use_mesh(mesh):
+    ad_sh, _, m_sh = jax.jit(step, in_shardings=named)(
+        params, adapters, opt, batch)
+
+print("loss_ref", float(m_ref["loss"]), "loss_sharded", float(m_sh["loss"]))
+assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 5e-2
+for a, b in zip(jax.tree.leaves(ad_ref), jax.tree.leaves(ad_sh)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=5e-3, rtol=5e-2)
+print("SHARDED_OK %ARCH%")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b", "mamba2-780m"])
+def test_sharded_train_step_matches_single_device(arch, tmp_path):
+    script = tmp_path / "sharded.py"
+    script.write_text(SHARDED_SCRIPT.replace("%ARCH%", arch))
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, timeout=900,
+                       env={**__import__("os").environ, "PYTHONPATH": SRC})
+    assert f"SHARDED_OK {arch}" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_cell_grid_complete():
+    """The assigned grid is 10 archs x 4 shapes = 40 cells; skips only for
+    long_500k on pure full-attention archs."""
+    all_cells = list(cells(include_skipped=True))
+    assert len(all_cells) == 40
+    skipped = [(a, s) for a, s, skip in all_cells if skip]
+    assert all(s == "long_500k" for _, s in skipped)
+    assert len(skipped) == 6
+    assert len(SHAPES) == 4
+
+
+def test_dryrun_results_if_present():
+    """When the dry-run has produced results, every recorded cell must have
+    compiled OK and fit per-chip HBM."""
+    results = Path(__file__).parents[1] / "dryrun_results"
+    files = list(results.glob("*.json")) if results.exists() else []
+    if not files:
+        pytest.skip("dry-run results not generated in this environment")
+    hbm = 16 * 1024 ** 3
+    for f in files:
+        rec = json.loads(f.read_text())
+        assert rec.get("ok"), f"{f.name}: {rec.get('error')}"
+        m = rec["memory"]
+        # TPU fit gate: the CPU-measured resident minus identified f32
+        # legalization artifacts, cross-checked by the analytic activation
+        # watermark (EXPERIMENTS.md §Dry-run documents the three figures)
+        candidates = [v for v in (m.get("resident_tpu_bytes"),
+                                  m.get("resident_analytic_bytes"))
+                      if v is not None]
+        resident = min(candidates) if candidates else (
+            m["argument_size_in_bytes"] + m["temp_size_in_bytes"]
+            + m["output_size_in_bytes"] - m["alias_size_in_bytes"])
+        assert resident < hbm, \
+            f"{f.name}: {resident/2**30:.1f} GiB exceeds v5e HBM"
+
+
+def test_hlo_analysis_trip_counts():
+    """The HLO analyzer must multiply dot flops by scan trip counts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze
+
+    def f(x, ws):
+        def body(h, w):
+            return jnp.dot(h, w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    x = jnp.zeros((8, 16))
+    ws = jnp.zeros((5, 16, 16))
+    hlo = jax.jit(f).lower(x, ws).compile().as_text()
+    stats = analyze(hlo)
+    expect = 2 * 8 * 16 * 16 * 5
+    assert stats.dot_flops == expect, (stats.dot_flops, expect)
+    assert 5 in stats.loop_trip_counts
