@@ -277,8 +277,34 @@ def sec88_overhead():
          f"|peak_mb={b.peak_bytes/2**20:.1f}")
 
 
+# Beyond-paper: cluster goodput under the router + autoscaler layer
+# (core/cluster.py) across the multi-tenant scenario presets. Goodput is
+# DistServe's SLO-attaining throughput; harli must hold it while adding
+# finetune throughput the separate fleet can't match.
+def cluster_goodput(duration_s: float = 90.0):
+    from repro.core.cluster import ClusterConfig, simulate_cluster
+    from repro.serving.trace import generate_scenario
+
+    for scen in ("steady", "spike"):
+        for mode in ("separate", "harli"):
+            reqs = generate_scenario(scen, duration_s, mean_rps=10.0,
+                                     seed=21)
+            t0 = time.time()
+            res = simulate_cluster(LLAMA, LLAMA, reqs,
+                                   SimConfig(mode=mode, seed=22),
+                                   ClusterConfig(n_initial=2))
+            s = res.stats
+            _row(f"cluster_goodput,{scen},{mode}",
+                 (time.time() - t0) * 1e6,
+                 f"goodput={s.goodput:.2f}|thr={s.throughput:.2f}"
+                 f"|attain={s.slo_attainment:.3f}"
+                 f"|ft={res.ft_throughput:.2f}"
+                 f"|fleet={res.final_fleet}/{res.peak_fleet}")
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
-       fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead]
+       fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
+       cluster_goodput]

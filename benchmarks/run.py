@@ -37,6 +37,8 @@ def main() -> None:
                 fn(duration_s=45.0)
             elif args.quick and fn.__name__ == "sec87_tp_mode":
                 fn(duration_s=45.0)
+            elif args.quick and fn.__name__ == "cluster_goodput":
+                fn(duration_s=40.0)
             else:
                 fn()
             print(f"# {fn.__name__}: {time.time()-t0:.1f}s")

@@ -1,0 +1,85 @@
+"""Cluster-scale experiment in one command: route a multi-tenant trace
+across a fleet of decode instances with the global router + autoscaler and
+compare harli co-location against a separate-fleet deployment on cluster
+goodput (DistServe's SLO-attaining throughput), QoS attainment and finetune
+throughput.
+
+    PYTHONPATH=src python examples/cluster_sim.py \
+        [--scenario spike] [--duration 60] [--rps 10] [--instances 2] \
+        [--policy least_loaded] [--no-autoscale]
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.core.autoscaler import AutoscalerConfig
+from repro.core.cluster import ClusterConfig, simulate_cluster
+from repro.core.router import RouterConfig
+from repro.core.simulator import SimConfig
+from repro.serving.trace import SCENARIOS, generate_scenario, peak_rps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="spike", choices=SCENARIOS)
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--rps", type=float, default=10.0)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--policy", default="least_loaded",
+                    choices=("least_loaded", "round_robin", "random"))
+    ap.add_argument("--inf", default="llama3-8b")
+    ap.add_argument("--ft", default="llama3-8b")
+    ap.add_argument("--qos-ms", type=float, default=40.0)
+    ap.add_argument("--ttft-slo", type=float, default=4.0)
+    ap.add_argument("--no-autoscale", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg_i, cfg_f = get_config(args.inf), get_config(args.ft)
+    probe = generate_scenario(args.scenario, args.duration, args.rps,
+                              seed=args.seed + 1)
+    print(f"scenario={args.scenario}: {len(probe)} requests over "
+          f"{args.duration:.0f}s (mean {len(probe)/args.duration:.1f} rps, "
+          f"peak {peak_rps(probe):.1f} rps)  fleet_0={args.instances}  "
+          f"policy={args.policy}  autoscale={not args.no_autoscale}")
+    print(f"SLOs: TTFT<={args.ttft_slo:.1f}s TPOT<={args.qos_ms:.0f}ms\n")
+
+    out = {}
+    for mode in ("separate", "harli"):
+        reqs = generate_scenario(args.scenario, args.duration, args.rps,
+                                 seed=args.seed + 1)
+        res = simulate_cluster(
+            cfg_i, cfg_f, reqs,
+            SimConfig(mode=mode, qos_s=args.qos_ms / 1e3,
+                      seed=args.seed + 2),
+            ClusterConfig(
+                n_initial=args.instances,
+                autoscale=not args.no_autoscale,
+                router=RouterConfig(policy=args.policy,
+                                    ttft_slo_s=args.ttft_slo,
+                                    tpot_slo_s=args.qos_ms / 1e3),
+                autoscaler=AutoscalerConfig()))
+        out[mode] = res
+        s = res.stats
+        acts = [d for d in res.decisions if d.action != "none"]
+        print(f"{mode:9s} goodput={s.goodput:6.2f} req/s  "
+              f"throughput={s.throughput:6.2f} req/s  "
+              f"SLO-attain={s.slo_attainment*100:5.1f}%")
+        print(f"{'':9s} TTFT-attain={s.ttft_attainment*100:5.1f}% "
+              f"TPOT-attain={s.tpot_attainment*100:5.1f}% "
+              f"rejected={s.rejected}  "
+              f"QoS-violations={res.qos_violation_frac*100:5.2f}%")
+        print(f"{'':9s} ft_throughput={res.ft_throughput:6.2f} "
+              f"(iters/s x batch)  fleet={res.final_fleet} final / "
+              f"{res.peak_fleet} peak  scale-actions={len(acts)} "
+              f"{[d.action for d in acts]}\n")
+
+    h, s = out["harli"], out["separate"]
+    if s.ft_throughput > 0:
+        print(f"harli/separate finetune throughput: "
+              f"{h.ft_throughput / s.ft_throughput:.2f}x at "
+              f"{h.stats.goodput / max(s.stats.goodput, 1e-9):.2f}x goodput")
+
+
+if __name__ == "__main__":
+    main()

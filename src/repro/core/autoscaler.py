@@ -1,0 +1,145 @@
+"""Periodic fleet controller: decode-pool sizing + instance role flips.
+
+Runs every ``interval_s`` of simulated time over a snapshot of per-instance
+signals and emits at most one action per tick ("Taming the Chaos"-style
+coordinated scaling: small reversible steps with a cooldown, never a bulk
+reconfiguration). Actions:
+
+  * ``add_instance``      — fleet saturated (high load or QoS violations
+                            with no colocation left to shed)
+  * ``remove_instance``   — sustained low load; the chosen instance drains
+  * ``to_decode(id)``     — QoS under pressure: pause that instance's
+                            finetune job (cheapest headroom first, §2.3 —
+                            inference always preempts finetune)
+  * ``to_colocated(id)``  — QoS headroom back + finetune backlog: resume
+  * ``to_finetune(id)``   — deep idle + large backlog: dedicate an idle
+                            instance to finetune until load returns
+  * ``none``
+
+The controller is pure policy: it never touches instances itself, the
+cluster event loop (core/cluster.py) applies decisions. That keeps the
+invariants testable — e.g. it can never emit ``remove_instance`` or
+``to_finetune`` when doing so would leave fewer than ``min_decode``
+serving instances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+ACTIONS = ("none", "add_instance", "remove_instance",
+           "to_decode", "to_colocated", "to_finetune")
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    interval_s: float = 5.0
+    min_decode: int = 1              # serving instances, hard floor
+    max_decode: int = 16
+    scale_up_load: float = 0.85      # mean serving load above -> grow
+    scale_down_load: float = 0.25    # mean serving load below -> shrink
+    viol_frac_shed: float = 0.02     # QoS violations above -> shed finetune
+    viol_frac_resume: float = 0.005  # below (and backlog) -> resume
+    idle_load_ft: float = 0.05       # below (and backlog) -> dedicate to ft
+    ft_target_iters_per_s: float = 0.0   # finetune demand; 0 = best-effort
+    cooldown_ticks: int = 2          # ticks to wait after any action
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSnapshot:
+    inst_id: int
+    role: str                        # decode | colocated | finetune
+    load: float                      # queue+active over slot budget
+    active: int                      # in-flight decode requests
+    colocatable: bool                # has a finetune job attached
+    can_serve: bool = True           # holds inference weights
+    draining: bool = False
+
+
+@dataclasses.dataclass
+class ScaleDecision:
+    t: float
+    action: str                      # one of ACTIONS
+    target: int = -1                 # instance id for role flips / removal
+    reason: str = ""
+
+
+class Autoscaler:
+    def __init__(self, cfg: AutoscalerConfig = AutoscalerConfig()):
+        self.cfg = cfg
+        self.decisions: List[ScaleDecision] = []
+        self._cooldown = 0
+
+    # ------------------------------------------------------------ policy --
+    def _decide(self, t: float, snaps: List[InstanceSnapshot],
+                viol_frac: float, ft_backlog: float) -> ScaleDecision:
+        cfg = self.cfg
+        serving = [s for s in snaps if s.role != "finetune"
+                   and not s.draining]
+        n_serving = len(serving)
+        mean_load = (sum(s.load for s in serving) / n_serving) \
+            if n_serving else 1.0
+        colocated = [s for s in serving if s.role == "colocated"]
+        paused = [s for s in serving if s.role == "decode" and s.colocatable]
+        dedicated = [s for s in snaps if s.role == "finetune"
+                     and s.colocatable and s.can_serve and not s.draining]
+
+        # --- QoS pressure: shed finetune first, then grow the fleet ------
+        if viol_frac > cfg.viol_frac_shed:
+            if colocated:
+                victim = max(colocated, key=lambda s: (s.load, s.inst_id))
+                return ScaleDecision(t, "to_decode", victim.inst_id,
+                                     f"viol={viol_frac:.3f}")
+            if n_serving < cfg.max_decode:
+                return ScaleDecision(t, "add_instance",
+                                     reason=f"viol={viol_frac:.3f}")
+            return ScaleDecision(t, "none", reason="at max_decode")
+        if mean_load > cfg.scale_up_load:
+            if n_serving < cfg.max_decode:
+                return ScaleDecision(t, "add_instance",
+                                     reason=f"load={mean_load:.2f}")
+            if colocated:
+                victim = max(colocated, key=lambda s: (s.load, s.inst_id))
+                return ScaleDecision(t, "to_decode", victim.inst_id,
+                                     f"load={mean_load:.2f} at max_decode")
+            return ScaleDecision(t, "none", reason="at max_decode")
+
+        # --- headroom: give capacity back to finetune --------------------
+        if viol_frac < cfg.viol_frac_resume and ft_backlog > 0:
+            if paused:
+                pick = min(paused, key=lambda s: (s.load, s.inst_id))
+                return ScaleDecision(t, "to_colocated", pick.inst_id,
+                                     f"backlog={ft_backlog:.1f}")
+            idle = [s for s in colocated
+                    if s.load <= cfg.idle_load_ft and s.active == 0]
+            if idle and n_serving > cfg.min_decode:
+                pick = min(idle, key=lambda s: (s.load, s.inst_id))
+                return ScaleDecision(t, "to_finetune", pick.inst_id,
+                                     f"backlog={ft_backlog:.1f} idle fleet")
+
+        # --- sustained low load: shrink ----------------------------------
+        if mean_load < cfg.scale_down_load and n_serving > cfg.min_decode:
+            pick = min(serving, key=lambda s: (s.load, s.inst_id))
+            return ScaleDecision(t, "remove_instance", pick.inst_id,
+                                 f"load={mean_load:.2f}")
+        # finetune-dedicated instances rejoin serving when load recovers
+        if dedicated and mean_load > 2 * cfg.scale_down_load:
+            pick = min(dedicated, key=lambda s: s.inst_id)
+            return ScaleDecision(t, "to_colocated", pick.inst_id,
+                                 "load recovered")
+        return ScaleDecision(t, "none")
+
+    def evaluate(self, t: float, snaps: List[InstanceSnapshot],
+                 viol_frac: float, ft_backlog: float = 0.0) -> ScaleDecision:
+        """One control tick. Applies cooldown, records the decision."""
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            d = ScaleDecision(t, "none", reason="cooldown")
+        else:
+            d = self._decide(t, snaps, viol_frac, ft_backlog)
+            if d.action != "none":
+                self._cooldown = self.cfg.cooldown_ticks
+        assert d.action in ACTIONS
+        self.decisions.append(d)
+        return d

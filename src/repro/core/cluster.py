@@ -1,0 +1,219 @@
+"""Cluster simulation: router + autoscaler over stepped decode instances.
+
+Composes the pieces into one discrete-event experiment:
+
+  * a trace of requests arrives at the cluster front door;
+  * ClusterRouter (core/router.py) admits and dispatches each to one
+    decode instance (or rejects it under saturation);
+  * every DecodeInstanceSim advances on a shared clock via its step() API;
+  * the Autoscaler (core/autoscaler.py) runs every control interval and
+    grows/shrinks the fleet or flips instance roles between decode-only,
+    co-located and finetune-dedicated.
+
+Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
+  harli    — every serving instance co-locates a finetune job, dynamic
+             quantum, roles under autoscaler control
+  separate — serving instances are decode-only; one dedicated finetune
+             instance free-runs (same total fleet size as harli, except
+             n_initial=1 where separate floors at 1 decode + 1 finetune
+             instance — MORE hardware than harli's single instance, so
+             the comparison is conservative against harli there)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
+                                   InstanceSnapshot, ScaleDecision)
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
+from repro.core.simulator import DecodeInstanceSim, SimConfig, fit_predictor
+from repro.models.config import ModelConfig
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_initial: int = 2               # serving fleet size at t=0
+    tick_s: float = 1.0              # event-loop / dispatch epoch
+    autoscale: bool = True
+    router: RouterConfig = dataclasses.field(default_factory=RouterConfig)
+    autoscaler: AutoscalerConfig = dataclasses.field(
+        default_factory=AutoscalerConfig)
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    mode: str
+    stats: ClusterStats
+    ft_iterations: float = 0.0
+    ft_throughput: float = 0.0       # iterations/s x minibatch (paper §8.2)
+    ft_stall_rounds: int = 0
+    qos_violation_frac: float = 0.0  # across all decode TPOT samples
+    tpot: List[float] = dataclasses.field(default_factory=list)
+    fleet_timeline: List[Tuple[float, int, int]] = dataclasses.field(
+        default_factory=list)        # (t, serving, colocated)
+    decisions: List[ScaleDecision] = dataclasses.field(default_factory=list)
+    # hardware counts: ALL live instances, including separate mode's
+    # dedicated finetune one — comparable across modes
+    final_fleet: int = 0
+    peak_fleet: int = 0
+
+
+class ClusterSim:
+    """Owns the fleet and the shared clock; applies autoscaler decisions."""
+
+    def __init__(self, cfg_inf: ModelConfig, cfg_ft: ModelConfig,
+                 sim: SimConfig, cluster: ClusterConfig):
+        self.cfg_inf = cfg_inf
+        self.cfg_ft = cfg_ft
+        self.sim = sim
+        self.cluster = cluster
+        spec = InstanceSpec(tp=sim.tp)
+        self.predictor, _ = fit_predictor(cfg_inf, sim)
+        self.router = ClusterRouter(
+            cluster.router, CostModel(cfg_inf, spec, seed=sim.seed + 7))
+        self.autoscaler = Autoscaler(cluster.autoscaler)
+        self._next_id = 0
+        self._fleet_timeline: List[Tuple[float, int, int]] = []
+        self._peak_total = 0
+        if sim.mode == "separate":
+            for _ in range(max(cluster.n_initial - 1, 1)):
+                self._spawn(0.0, role="decode", colocate=False)
+            self._spawn(0.0, role="finetune", serves_inference=False)
+        else:
+            for _ in range(cluster.n_initial):
+                self._spawn(0.0, role="colocated")
+
+    # ------------------------------------------------------------ fleet --
+    def _spawn(self, t: float, role: str, colocate: bool = True,
+               serves_inference: bool = True) -> DecodeInstanceSim:
+        inst = DecodeInstanceSim(
+            self._next_id, self.cfg_inf if serves_inference else self.cfg_ft,
+            self.cfg_ft if colocate else None, self.sim,
+            self.predictor, self.sim.seed + self._next_id,
+            serves_inference=serves_inference, t0=t, role=role)
+        self._next_id += 1
+        self.router.add_instance(inst, now=t)
+        return inst
+
+    def _serving(self) -> List[DecodeInstanceSim]:
+        return self.router.serving_instances()
+
+    def _snapshots(self) -> List[InstanceSnapshot]:
+        return [InstanceSnapshot(
+            inst_id=i.inst_id, role=i.role, load=i.load(),
+            active=len(i.active), colocatable=i.colocate,
+            can_serve=i.serves_inference, draining=i.draining)
+            for i in self.router.instances.values()]
+
+    def _ft_backlog(self, t: float) -> float:
+        """Finetune demand minus progress, in iterations. With no explicit
+        target, a dedicated/colocated job is treated as always-hungry."""
+        target = self.cluster.autoscaler.ft_target_iters_per_s
+        done = sum(i.ft.iterations for i in self.router.all_instances()
+                   if i.ft is not None)
+        if target <= 0:
+            return 1.0               # best-effort: backlog never empties
+        return max(target * t - done, 0.0)
+
+    def _apply(self, d: ScaleDecision, t: float) -> None:
+        insts = self.router.instances
+        if d.action == "add_instance":
+            role = "colocated" if self.sim.mode == "harli" else "decode"
+            self._spawn(t, role=role, colocate=self.sim.mode == "harli")
+        elif d.action == "remove_instance":
+            inst = insts.get(d.target)
+            # guard at application time too: never drain below the floor
+            n_serving = len(self._serving())
+            if inst is not None and not inst.draining \
+                    and n_serving > self.cluster.autoscaler.min_decode:
+                inst.draining = True
+        elif d.action == "to_decode":
+            inst = insts.get(d.target)
+            if inst is not None and inst.role == "colocated":
+                inst.set_role("decode")
+        elif d.action == "to_colocated":
+            inst = insts.get(d.target)
+            if inst is not None and inst.colocate and inst.serves_inference:
+                inst.set_role("colocated")
+        elif d.action == "to_finetune":
+            inst = insts.get(d.target)
+            if inst is not None and inst.colocate \
+                    and len(self._serving()) > \
+                    self.cluster.autoscaler.min_decode:
+                inst.set_role("finetune")
+
+    # ------------------------------------------------------------- loop --
+    def run(self, reqs: List[Request],
+            duration: Optional[float] = None) -> ClusterResult:
+        cl = self.cluster
+        pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        if duration is None:
+            last = max((r.arrival for r in reqs), default=0.0)
+            duration = last + 30.0
+        t, qi = 0.0, 0
+        next_control = cl.autoscaler.interval_s
+        while t < duration:
+            epoch_end = min(t + cl.tick_s, duration)
+            while qi < len(pending) and pending[qi].arrival <= epoch_end:
+                self.router.dispatch(pending[qi], pending[qi].arrival)
+                qi += 1
+            for inst in list(self.router.instances.values()):
+                while inst.t < epoch_end:
+                    inst.step(epoch_end)
+                if inst.drained:
+                    self.router.retire(inst.inst_id)
+            if cl.autoscale and epoch_end + 1e-9 >= next_control:
+                d = self.autoscaler.evaluate(
+                    epoch_end, self._snapshots(),
+                    self.router.recent_violation_frac(),
+                    self._ft_backlog(epoch_end))
+                self._apply(d, epoch_end)
+                next_control += cl.autoscaler.interval_s
+            t = epoch_end
+            self._fleet_point(t, self._serving())
+        self.router.check_conservation()
+        return self._result(duration)
+
+    def _fleet_point(self, t: float, serving) -> None:
+        self._fleet_timeline.append(
+            (t, len(serving),
+             sum(1 for i in serving if i.role == "colocated")))
+        self._peak_total = max(self._peak_total,
+                               len(self.router.instances))
+
+    def _result(self, duration: float) -> ClusterResult:
+        for inst in self.router.all_instances():
+            inst.collect_tpot()
+        res = ClusterResult(mode=self.sim.mode,
+                            stats=self.router.stats(duration))
+        minibatch = self.sim.micro_batch * self.sim.accum
+        for inst in self.router.all_instances():
+            if inst.ft is not None:
+                res.ft_iterations += inst.ft.iterations
+                res.ft_stall_rounds += inst.ft.stall_rounds
+            res.tpot.extend(inst.result_tpot)
+        res.ft_throughput = res.ft_iterations / duration * minibatch
+        if res.tpot:
+            # same limit the router's per-request TPOT attainment uses
+            rcfg = self.cluster.router
+            lim = rcfg.tpot_slo_s * rcfg.tpot_slack
+            res.qos_violation_frac = \
+                sum(1 for x in res.tpot if x > lim) / len(res.tpot)
+        res.fleet_timeline = self._fleet_timeline
+        res.decisions = self.autoscaler.decisions
+        res.final_fleet = len(self.router.instances)
+        res.peak_fleet = max(self._peak_total, res.final_fleet)
+        return res
+
+
+def simulate_cluster(cfg_inf: ModelConfig, cfg_ft: ModelConfig,
+                     reqs: List[Request], sim: SimConfig,
+                     cluster: Optional[ClusterConfig] = None,
+                     duration: Optional[float] = None) -> ClusterResult:
+    """One seeded cluster experiment (deterministic for a fixed seed)."""
+    cs = ClusterSim(cfg_inf, cfg_ft, sim, cluster or ClusterConfig())
+    return cs.run(reqs, duration)

@@ -1,0 +1,231 @@
+"""Cluster-level request router: global admission + load-aware dispatch.
+
+Sits above the per-instance QoS machinery (scheduler/allocator/predictor):
+the router decides *which* decode instance serves a request — or rejects it
+when the whole fleet is saturated — while each instance keeps deciding *how*
+to share its chips between decode rounds and finetune quanta.
+
+Design follows DistServe (Zhong et al., OSDI'24): the cluster objective is
+**goodput** — completed requests per second that attain BOTH latency SLOs
+(TTFT for the prefill phase, TPOT for decode) — not raw throughput. The
+router therefore tracks per-request SLO attainment and exposes cluster
+goodput accounting; the autoscaler (core/autoscaler.py) consumes the same
+signals to resize the fleet.
+
+Conservation invariant (tested): every request handed to ``dispatch`` is
+either enqueued on exactly one instance or rejected — never both, never
+dropped, never duplicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.simulator import DecodeInstanceSim
+from repro.serving.request import Request
+
+POLICIES = ("least_loaded", "round_robin", "random")
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    policy: str = "least_loaded"
+    ttft_slo_s: float = 4.0          # prefill SLO (queue + prefill compute)
+    tpot_slo_s: float = 0.040        # decode SLO, same target the QoS
+    tpot_slack: float = 1.05         # scheduler enforces per round
+    tpot_quantile: float = 0.99      # per-request attainment percentile
+    reject_load: float = 4.0         # reject when the best target's queue
+    seed: int = 0                    # exceeds reject_load x max_slots
+
+
+@dataclasses.dataclass
+class RoutedRequest:
+    rid: int
+    instance: int                    # -1 = rejected at admission
+    arrival: float
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    duration: float = 0.0
+    offered: int = 0                 # requests presented to the router
+    routed: int = 0
+    rejected: int = 0
+    dropped: int = 0                 # routed but could never fit (oversized)
+    completed: int = 0
+    attained: int = 0                # completed AND met both SLOs
+    throughput: float = 0.0          # completed / duration
+    goodput: float = 0.0             # attained / duration  (DistServe)
+    slo_attainment: float = 0.0      # attained / offered
+    ttft_attainment: float = 0.0
+    tpot_attainment: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p99: float = 0.0
+
+
+class ClusterRouter:
+    """Load-aware dispatcher over a mutable fleet of DecodeInstanceSim.
+
+    The fleet is shared with the cluster event loop and the autoscaler:
+    instances may be added, put into draining, or have their role flipped
+    between control periods; the router re-reads eligibility on every
+    dispatch. One prefill chain is modeled per serving instance (the paper
+    deploys PD-disaggregated, prefill pool scaling with decode capacity).
+    """
+
+    def __init__(self, cfg: RouterConfig, prefill_cm: CostModel):
+        assert cfg.policy in POLICIES, cfg.policy
+        self.cfg = cfg
+        self.prefill_cm = prefill_cm
+        self.instances: Dict[int, DecodeInstanceSim] = {}
+        self.retired: Dict[int, DecodeInstanceSim] = {}
+        self._prefill_free: Dict[int, float] = {}   # per-instance chain time
+        self.routed: List[RoutedRequest] = []
+        self._assigned: Dict[int, int] = {}         # rid -> instance id
+        self._rng = np.random.default_rng(cfg.seed)
+        self._rr_cursor = 0
+
+    # ------------------------------------------------------------ fleet --
+    def add_instance(self, inst: DecodeInstanceSim, now: float = 0.0) -> None:
+        assert inst.inst_id not in self.instances
+        self.instances[inst.inst_id] = inst
+        self._prefill_free[inst.inst_id] = now
+
+    def retire(self, inst_id: int) -> None:
+        """Decommission a drained instance: it leaves the active fleet (no
+        stepping, no finetune free-running) but stays visible to the final
+        accounting — its served requests and finetune progress happened."""
+        inst = self.instances.pop(inst_id)
+        assert inst.drained, "retiring an instance that still holds work"
+        self._prefill_free.pop(inst_id, None)
+        self.retired[inst_id] = inst
+
+    def all_instances(self) -> List[DecodeInstanceSim]:
+        """Active + retired, for end-of-run accounting."""
+        return list(self.instances.values()) + list(self.retired.values())
+
+    def serving_instances(self) -> List[DecodeInstanceSim]:
+        """Instances eligible for new inference traffic."""
+        return [i for i in self.instances.values()
+                if i.serves_inference and i.role != "finetune"
+                and not i.draining]
+
+    # --------------------------------------------------------- dispatch --
+    def _pick_target(self, cand: List[DecodeInstanceSim]
+                     ) -> DecodeInstanceSim:
+        if self.cfg.policy == "round_robin":
+            pick = cand[self._rr_cursor % len(cand)]
+            self._rr_cursor += 1
+            return pick
+        if self.cfg.policy == "random":
+            return cand[int(self._rng.integers(len(cand)))]
+        # least_loaded (join-shortest-queue on the occupancy signal);
+        # ties broken by instance id for determinism
+        return min(cand, key=lambda i: (i.load(), i.inst_id))
+
+    def dispatch(self, req: Request, now: float) -> int:
+        """Route one request. Returns the chosen instance id, or -1 when
+        admission rejects it (fleet saturated). Exactly-once by
+        construction: a request is enqueued on one instance or none."""
+        assert req.rid not in self._assigned, "request routed twice"
+        # admission rejects only under GLOBAL saturation: an instance past
+        # reject_load is skipped as long as any other can still absorb
+        cand = [i for i in self.serving_instances()
+                if i.load() <= self.cfg.reject_load]
+        if not cand:
+            self._assigned[req.rid] = -1
+            self.routed.append(RoutedRequest(req.rid, -1, req.arrival))
+            return -1
+        inst = self._pick_target(cand)
+        # prefill chain: request queues behind earlier prefills on the
+        # instance's prefill partner, then decode admission takes over
+        t_start = max(self._prefill_free[inst.inst_id], req.arrival, now)
+        ready = t_start + self.prefill_cm.prefill_latency(req.prompt_len)
+        self._prefill_free[inst.inst_id] = ready
+        req.prefill_done = ready
+        inst.enqueue(req, ready)
+        self._assigned[req.rid] = inst.inst_id
+        self.routed.append(RoutedRequest(req.rid, inst.inst_id, req.arrival))
+        return inst.inst_id
+
+    # ---------------------------------------------------------- metrics --
+    def recent_violation_frac(self, window: int = 200) -> float:
+        """Fraction of the fleet's last `window` decode-round TPOT samples
+        over the SLO — the autoscaler's QoS-headroom signal."""
+        samples: List[float] = []
+        for inst in self.instances.values():
+            for _, _, lat, bs in inst.quantum_timeline[-window:]:
+                if bs > 0:
+                    samples.append(lat)
+        if not samples:
+            return 0.0
+        lim = self.cfg.tpot_slo_s * self.cfg.tpot_slack
+        return sum(1 for s in samples if s > lim) / len(samples)
+
+    def stats(self, duration: float) -> ClusterStats:
+        """Cluster goodput accounting over every request the router saw."""
+        cfg = self.cfg
+        st = ClusterStats(duration=duration, offered=len(self.routed),
+                          dropped=sum(i.dropped
+                                      for i in self.all_instances()))
+        ttfts: List[float] = []
+        tpots: List[float] = []
+        reqs: Dict[int, Request] = {}
+        for inst in self.all_instances():
+            for r in inst.all_reqs:
+                reqs[r.rid] = r
+        for rr in self.routed:
+            if rr.instance < 0:
+                st.rejected += 1
+                continue
+            st.routed += 1
+            r = reqs.get(rr.rid)
+            if r is None or r.finish < 0 or not r.token_times:
+                continue
+            st.completed += 1
+            ttft = r.token_times[0] - r.arrival
+            samples = r.tpot_samples()
+            tpot_p = float(np.percentile(samples, cfg.tpot_quantile * 100)) \
+                if samples else 0.0
+            ttfts.append(ttft)
+            tpots.append(tpot_p)
+            ttft_ok = ttft <= cfg.ttft_slo_s
+            tpot_ok = tpot_p <= cfg.tpot_slo_s * cfg.tpot_slack
+            st.ttft_attainment += ttft_ok
+            st.tpot_attainment += tpot_ok
+            if ttft_ok and tpot_ok:
+                st.attained += 1
+        if duration > 0:
+            st.throughput = st.completed / duration
+            st.goodput = st.attained / duration
+        if st.offered:
+            st.slo_attainment = st.attained / st.offered
+        if st.completed:
+            st.ttft_attainment /= st.completed
+            st.tpot_attainment /= st.completed
+        if ttfts:
+            st.ttft_p99 = float(np.percentile(ttfts, 99))
+        if tpots:
+            st.tpot_p99 = float(np.percentile(tpots, 99))
+        return st
+
+    def check_conservation(self) -> None:
+        """Every offered request routed exactly once or rejected; every
+        enqueued request traces back to exactly one dispatch."""
+        seen = [rr.rid for rr in self.routed]
+        assert len(seen) == len(set(seen)), "request dispatched twice"
+        enq: Dict[int, int] = {}
+        for inst in self.all_instances():
+            for r in inst.all_reqs:
+                assert r.rid not in enq, "request on two instances"
+                enq[r.rid] = inst.inst_id
+        for rr in self.routed:
+            if rr.instance < 0:
+                assert rr.rid not in enq, "rejected request was enqueued"
+            else:
+                assert enq.get(rr.rid) == rr.instance, "assignment mismatch"
+        assert len(enq) == sum(1 for rr in self.routed if rr.instance >= 0)

@@ -15,6 +15,7 @@ Modes (paper §8.1):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -201,11 +202,29 @@ class FinetuneSim:
 
 
 # ----------------------------------------------------------- decode + colo
+# Instance roles (autoscaler-controlled; see core/autoscaler.py):
+#   decode    — inference only, finetune quantum forced to 0
+#   colocated — inference + co-scheduled finetune (harli/static behaviour)
+#   finetune  — dedicated finetune instance; free-runs whenever idle
+ROLES = ("decode", "colocated", "finetune")
+
+
 class DecodeInstanceSim:
+    """One decode instance, drivable by an external event loop.
+
+    Two usage modes:
+      * single-instance experiments call ``run(reqs, ready_times, duration)``
+        (the original monolithic loop, now a thin wrapper);
+      * the cluster layer (core/cluster.py) calls ``enqueue`` as the router
+        dispatches requests and ``step(until)`` to advance one event at a
+        time, interleaving instances on a shared clock.
+    """
+
     def __init__(self, inst_id: int, cfg_inf: ModelConfig,
                  cfg_ft: Optional[ModelConfig], sim: SimConfig,
                  predictor: Optional[TwoStageLatencyPredictor], seed: int,
-                 serves_inference: bool = True):
+                 serves_inference: bool = True, t0: float = 0.0,
+                 role: Optional[str] = None):
         self.inst_id = inst_id
         self.sim = sim
         self.cfg_inf = cfg_inf
@@ -256,6 +275,47 @@ class DecodeInstanceSim:
         self.quantum_timeline: List[Tuple[float, int, float, int]] = []
         self.rounds = 0
         self.bs_accum = 0
+        # ---- external-event-loop state ---------------------------------
+        if role is None:
+            role = "colocated" if self.colocate else "decode"
+            if not serves_inference:
+                role = "finetune"
+        assert role in ROLES, role
+        self.role = role
+        self.t = t0                      # instance-local clock
+        self.draining = False            # router stops dispatching here
+        self.active: List[Request] = []
+        self._pending: List[Tuple[float, int, Request]] = []   # ready heap
+        self.all_reqs: List[Request] = []
+        self.dropped = 0                 # requests that could never fit
+        self._snap_ctr = 0
+
+    # -- external event-loop API ------------------------------------------
+    def set_role(self, role: str) -> None:
+        assert role in ROLES, role
+        if role == "colocated":
+            assert self.colocate, "instance has no finetune job to resume"
+        self.role = role
+
+    def enqueue(self, req: Request, ready_time: float) -> None:
+        """Hand a request to this instance; it becomes admissible once its
+        prefill completes at ``ready_time``."""
+        heapq.heappush(self._pending, (ready_time, req.rid, req))
+        self.all_reqs.append(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending) + len(self.active)
+
+    @property
+    def drained(self) -> bool:
+        """True once a draining instance has emptied and may be retired."""
+        return self.draining and not self.active and not self._pending
+
+    def load(self) -> float:
+        """Occupancy signal for the router/autoscaler: active + queued
+        requests relative to the slot budget (may exceed 1.0)."""
+        return self.queue_depth / max(self.sim.max_slots, 1)
 
     def _can_admit(self, active: List[Request], cand: Request) -> bool:
         """vLLM-style conservative admission: reserve prompt + max output
@@ -266,7 +326,7 @@ class DecodeInstanceSim:
         return need <= self.kv_budget_chunks
 
     def _pick_k(self, t, bs, ctx) -> int:
-        if not self.colocate:
+        if not self.colocate or self.role == "decode":
             return 0
         if self.straggler.suppress_quantum and bs > 0:
             self.ft.stall_rounds += 1
@@ -276,121 +336,154 @@ class DecodeInstanceSim:
             if bs > 0:
                 self.ft.stall_rounds += 1
             return 0
+        if self.role == "finetune" or \
+                (self.sched is None and self.sim.mode != "static"):
+            # dedicated ft instance (or no QoS scheduler fitted, e.g. the
+            # separate-mode ft instance): free-run only while idle
+            return self.sim.k_max if bs == 0 else 0
         if self.sim.mode == "static":
             return min(int(round(self.sim.static_quantum * self.sim.k_max)),
                        avail)
-        if self.sim.mode == "separate":
-            # separate-mode ft instance free-runs
-            return self.sim.k_max if bs == 0 else 0
         d = self.sched.pick(bs, ctx, ft_ready=avail > 0,
                             ft_units_available=avail)
         return d.k
 
+    # -- one simulation event ---------------------------------------------
+    def _admit(self) -> None:
+        while self._pending and self._pending[0][0] <= self.t \
+                and len(self.active) < self.sim.max_slots:
+            r = self._pending[0][2]
+            if not self._can_admit(self.active, r):
+                if not self.active and not self._can_admit([], r):
+                    # can never fit even on an empty instance: drop it
+                    # (finish stays -1 — routed but not completed) rather
+                    # than wedge the queue head and stall the event loop
+                    heapq.heappop(self._pending)
+                    self.dropped += 1
+                    continue
+                break
+            self.alloc.pressure_shrink()
+            if not self.alloc.kv_alloc_tokens(r.prompt_len):
+                break
+            heapq.heappop(self._pending)
+            r.token_times.append(self.t)    # first token from prefill
+            r.generated = 1
+            self.active.append(r)
+
+    def step(self, until: float) -> float:
+        """Advance the instance clock by ONE event (an idle fast-forward, a
+        finetune free-run burst, or a decode round), never starting an event
+        at or beyond ``until``. Returns the new clock. A decode round that
+        begins before ``until`` may finish past it (rounds are atomic)."""
+        if self.t >= until:
+            return self.t
+        sim = self.sim
+        self._admit()
+        bs = len(self.active)
+        ctx = (sum(r.context_len for r in self.active) / bs) if bs else 0.0
+        # ---- idle fast-forward ------------------------------------------
+        if bs == 0:
+            nxt = min(self._pending[0][0], until) if self._pending else until
+            if nxt <= self.t:
+                # head-of-line ready but blocked (transient alloc failure):
+                # with no active work nothing can unblock it before `until`,
+                # so jump there instead of spinning in place
+                nxt = until
+            if self.colocate and self.role != "decode":
+                k = self._pick_k(self.t, 0, 0.0)
+                if k > 0:
+                    # free-run, but stop at the next arrival (+1 unit)
+                    unit = self.ft.avg_unit_time_solo()
+                    if self.t + k * unit > nxt:
+                        k = max(1, min(k, int((nxt - self.t) / unit) + 1))
+                    lat = k * unit
+                    self.ft.advance(k, self.t + lat)
+                    self.quantum_timeline.append((self.t, k, lat, 0))
+                    self.t += lat
+                    return self.t
+                # stalled on DMA: jump to DMA completion or next arrival
+                self.t = min(max(self.ft.dma_busy_until, self.t + 1e-4), nxt)\
+                    if self.ft.dma_busy_until > self.t else nxt
+                return self.t
+            self.t = nxt
+            return self.t
+        # ---- co-scheduled decode round ----------------------------------
+        k = self._pick_k(self.t, bs, ctx)
+        cm = self.cm_inf
+        if k > 0:
+            lat = cm.colocated_round(bs, ctx, k, sim.micro_batch, sim.ft_seq)
+            expected = cm.colocated_round(bs, ctx, k, sim.micro_batch,
+                                          sim.ft_seq, noisy=False)
+        else:
+            lat = cm.decode_solo(bs, ctx)
+            expected = cm.decode_solo(bs, ctx, noisy=False)
+        if sim.straggler_prob and self._rng.random() < sim.straggler_prob:
+            lat *= float(self._rng.uniform(3.0, 8.0))   # injected fault
+        self.t += lat
+        self.rounds += 1
+        self.bs_accum += bs
+        self.straggler.observe(lat, expected_s=expected)
+        if self.sched is not None:
+            self.sched.observe(lat)
+        if self.colocate and k > 0:
+            self.ft.advance(k, self.t)
+        elif self.colocate:
+            self.ft.pump_dma(self.t)
+        self.quantum_timeline.append((self.t, k, lat, bs))
+        self.batch_timeline.append((self.t, bs))
+        # ---- token bookkeeping ------------------------------------------
+        self.alloc.pressure_shrink()
+        self.alloc.kv_alloc_tokens(bs)
+        done = []
+        for r in self.active:
+            r.token_times.append(self.t)
+            r.generated += 1
+            if r.generated >= r.max_new_tokens:
+                r.finish = self.t
+                done.append(r)
+        for r in done:
+            self.active.remove(r)
+            self.alloc.kv_free_tokens(r.context_len)
+        self._snap_ctr += 1
+        if self._snap_ctr % sim.snapshot_every == 0:
+            self.alloc.snapshot(self.t)
+        return self.t
+
+    def collect_tpot(self) -> None:
+        """Fold per-token latencies of every routed request into the result
+        buffer (call once, after the event loop ends)."""
+        for r in self.all_reqs:
+            self.result_tpot.extend(r.tpot_samples())
+
     def run(self, reqs: List[Request], ready_times: Dict[int, float],
             duration: float) -> None:
-        sim = self.sim
-        pending = sorted(reqs, key=lambda r: ready_times[r.rid])
-        qi = 0
-        active: List[Request] = []
-        t = 0.0
-        snap_ctr = 0
-        while t < duration:
-            # ---- admissions --------------------------------------------
-            while qi < len(pending) and ready_times[pending[qi].rid] <= t \
-                    and len(active) < sim.max_slots:
-                r = pending[qi]
-                if not self._can_admit(active, r):
-                    break
-                self.alloc.pressure_shrink()
-                if not self.alloc.kv_alloc_tokens(r.prompt_len):
-                    break
-                r.token_times.append(t)     # first token from prefill
-                r.generated = 1
-                active.append(r)
-                qi += 1
-            bs = len(active)
-            ctx = (sum(r.context_len for r in active) / bs) if bs else 0.0
-            # ---- idle fast-forward --------------------------------------
-            if bs == 0:
-                nxt = ready_times[pending[qi].rid] if qi < len(pending) \
-                    else duration
-                if self.colocate:
-                    k = self._pick_k(t, 0, 0.0)
-                    if k > 0:
-                        # free-run, but stop at the next arrival (+1 unit)
-                        unit = self.ft.avg_unit_time_solo()
-                        if t + k * unit > nxt:
-                            k = max(1, min(k, int((nxt - t) / unit) + 1))
-                        lat = k * unit
-                        self.ft.advance(k, t + lat)
-                        self.quantum_timeline.append((t, k, lat, 0))
-                        t = t + lat
-                        continue
-                    # stalled on DMA: jump to DMA completion or next arrival
-                    t = min(max(self.ft.dma_busy_until, t + 1e-4), nxt) \
-                        if self.ft.dma_busy_until > t else nxt
-                    continue
-                t = nxt
-                continue
-            # ---- co-scheduled decode round ------------------------------
-            k = self._pick_k(t, bs, ctx)
-            cm = self.cm_inf
-            if k > 0:
-                lat = cm.colocated_round(bs, ctx, k, sim.micro_batch,
-                                         sim.ft_seq)
-                expected = cm.colocated_round(bs, ctx, k, sim.micro_batch,
-                                              sim.ft_seq, noisy=False)
-            else:
-                lat = cm.decode_solo(bs, ctx)
-                expected = cm.decode_solo(bs, ctx, noisy=False)
-            if sim.straggler_prob and \
-                    self._rng.random() < sim.straggler_prob:
-                lat *= float(self._rng.uniform(3.0, 8.0))   # injected fault
-            t += lat
-            self.rounds += 1
-            self.bs_accum += bs
-            self.straggler.observe(lat, expected_s=expected)
-            if self.sched is not None:
-                self.sched.observe(lat)
-            if self.colocate and k > 0:
-                self.ft.advance(k, t)
-            elif self.colocate:
-                self.ft.pump_dma(t)
-            self.quantum_timeline.append((t, k, lat, bs))
-            self.batch_timeline.append((t, bs))
-            # ---- token bookkeeping --------------------------------------
-            self.alloc.pressure_shrink()
-            self.alloc.kv_alloc_tokens(bs)
-            done = []
-            for r in active:
-                r.token_times.append(t)
-                r.generated += 1
-                if r.generated >= r.max_new_tokens:
-                    r.finish = t
-                    done.append(r)
-            for r in done:
-                active.remove(r)
-                self.alloc.kv_free_tokens(r.context_len)
-            snap_ctr += 1
-            if snap_ctr % sim.snapshot_every == 0:
-                self.alloc.snapshot(t)
-        # collect TPOT
+        """Original monolithic loop, as a wrapper over enqueue/step."""
         for r in reqs:
-            self.result_tpot.extend(r.tpot_samples())
+            self.enqueue(r, ready_times[r.rid])
+        while self.t < duration:
+            self.step(duration)
+        self.collect_tpot()
 
 
 # ------------------------------------------------------------- experiment
+def fit_predictor(cfg_inf: ModelConfig, sim: SimConfig):
+    """Fit the harli two-stage predictor on cost-model samples, with the
+    seed layout every experiment shares. Returns (predictor, fit_report);
+    (None, None) for modes that don't schedule with it."""
+    if sim.mode != "harli":
+        return None, None
+    predictor = TwoStageLatencyPredictor(k_max=sim.k_max)
+    cm_fit = CostModel(cfg_inf, InstanceSpec(tp=sim.tp), seed=sim.seed + 13)
+    report = predictor.fit_from_costmodel(
+        cm_fit, micro_batch=sim.micro_batch, ft_seq=sim.ft_seq)
+    return predictor, report
+
+
 def simulate(cfg_inf: ModelConfig, cfg_ft: ModelConfig,
              reqs: List[Request], sim: SimConfig,
              duration: Optional[float] = None) -> SimResult:
     spec = InstanceSpec(tp=sim.tp)
-    predictor = None
-    pred_report = None
-    if sim.mode == "harli":
-        predictor = TwoStageLatencyPredictor(k_max=sim.k_max)
-        cm_fit = CostModel(cfg_inf, spec, seed=sim.seed + 13)
-        pred_report = predictor.fit_from_costmodel(
-            cm_fit, micro_batch=sim.micro_batch, ft_seq=sim.ft_seq)
+    predictor, pred_report = fit_predictor(cfg_inf, sim)
 
     if sim.mode == "separate":
         instances = [

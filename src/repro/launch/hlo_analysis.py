@@ -179,7 +179,9 @@ def _dot_flops(line: str, result_sig: str, shapes: Dict[str, List[int]]
     n = 1
     for d in rdims:
         n *= d
-    ops = re.search(r"dot\(\s*%?([\w.\-$]+)", line)
+    # operands may carry type annotations: dot(f32[8,16]{1,0} %lhs, ...);
+    # dims may be bounded-dynamic (<=16), so match anything up to the ]
+    ops = re.search(r"dot\(\s*(?:\w+\[[^\]]*\]\S*\s+)?%?([\w.\-$]+)", line)
     lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     kprod = 1
     if ops and lc and ops.group(1) in shapes:

@@ -32,16 +32,24 @@ class TraceConfig:
     output_median: int = 128
     output_sigma: float = 0.9
     output_max: int = 1024
+    # multiplicative flash-crowd window (spike preset; 1.0 = disabled)
+    spike_mult: float = 1.0
+    spike_start_frac: float = 0.4    # window position, fraction of duration
+    spike_dur_frac: float = 0.15
     seed: int = 0
 
 
 def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
     rng = np.random.default_rng(cfg.seed)
     reqs: List[Request] = []
+    spike_lo = cfg.spike_start_frac * cfg.duration_s
+    spike_hi = spike_lo + cfg.spike_dur_frac * cfg.duration_s
     t, rid = 0.0, 0
     while t < cfg.duration_s:
         envelope = 1.0 + cfg.rate_amplitude * math.sin(
             2 * math.pi * t / cfg.rate_period_s)
+        if cfg.spike_mult != 1.0 and spike_lo <= t < spike_hi:
+            envelope *= cfg.spike_mult
         rate = max(cfg.mean_rps * envelope, 1e-3)
         # gamma-distributed gap with mean 1/rate, shape = burstiness
         gap = rng.gamma(cfg.burstiness, 1.0 / (rate * cfg.burstiness))
@@ -56,6 +64,55 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
                             max_new_tokens=max(o, 1)))
         rid += 1
     return reqs
+
+
+# ------------------------------------------------- multi-tenant scenarios
+# Workload-shape presets for the cluster layer (core/cluster.py): same
+# generator, different envelope/burstiness/length mixes. Each models a
+# tenant class a MaaS fleet must absorb (steady API traffic, a daily cycle,
+# a flash crowd, agentic long-tail jobs).
+SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail")
+
+
+def scenario_config(name: str, duration_s: float = 600.0,
+                    mean_rps: float = 5.3, seed: int = 0) -> TraceConfig:
+    base = dict(duration_s=duration_s, mean_rps=mean_rps, seed=seed)
+    if name == "steady":
+        # near-Poisson arrivals, flat envelope: the autoscaler baseline
+        return TraceConfig(burstiness=1.0, rate_amplitude=0.05, **base)
+    if name == "diurnal":
+        # one slow day/night cycle across the trace; moderate bursts
+        return TraceConfig(burstiness=0.5, rate_amplitude=0.8,
+                           rate_period_s=duration_s, **base)
+    if name == "spike":
+        # steady background + a 4x flash crowd over 15% of the trace
+        return TraceConfig(burstiness=1.0, rate_amplitude=0.05,
+                           spike_mult=4.0, **base)
+    if name == "heavy_tail":
+        # very bursty arrivals, fat prompt/output tails (agentic traffic)
+        return TraceConfig(burstiness=0.2, rate_amplitude=0.3,
+                           prompt_sigma=1.3, output_sigma=1.4,
+                           output_max=2048, **base)
+    raise ValueError(f"unknown scenario {name!r}; choose from {SCENARIOS}")
+
+
+def generate_scenario(name: str, duration_s: float = 600.0,
+                      mean_rps: float = 5.3, seed: int = 0) -> List[Request]:
+    return generate(scenario_config(name, duration_s, mean_rps, seed))
+
+
+def peak_rps(reqs: List[Request], window_s: float = 10.0) -> float:
+    """Max windowed arrival rate — the load-shape metric the scenario
+    tests assert on (spike peak >> steady peak at equal mean)."""
+    if not reqs:
+        return 0.0
+    arr = sorted(r.arrival for r in reqs)
+    best, lo = 0, 0
+    for hi in range(len(arr)):
+        while arr[hi] - arr[lo] > window_s:
+            lo += 1
+        best = max(best, hi - lo + 1)
+    return best / window_s
 
 
 def controlled_load(phases=((8, 60.0), (42, 60.0), (24, 60.0)),

@@ -1,0 +1,116 @@
+"""Dependency-free stand-in for the slice of `hypothesis` the suite uses.
+
+The property tests draw random operation sequences; when hypothesis is
+installed they get shrinking and example databases for free. When it is
+not (the tier-1 container ships without it), this module provides the same
+`given/settings/strategies` surface backed by seeded `random.Random`
+streams, so every property still runs `max_examples` deterministic cases
+per test. No shrinking — a failing example prints its inputs instead.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+_DEFAULT_EXAMPLES = 20
+_SEED = 0x4A71                      # stable across runs and machines
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def _lists(elements: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats,
+                             booleans=_booleans, sampled_from=_sampled_from,
+                             tuples=_tuples, lists=_lists)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records max_examples on the (already @given-wrapped) function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        # hypothesis semantics: positional strategies bind to the RIGHTMOST
+        # parameters; anything left over (leading params) is a pytest
+        # fixture and stays visible in the wrapper's signature.
+        sig = inspect.signature(fn)
+        names = [p.name for p in sig.parameters.values()]
+        pos_pool = [n for n in names if n not in kw_strategies]
+        split = len(pos_pool) - len(arg_strategies)
+        assert split >= 0, "more positional strategies than parameters"
+        drawn_names = pos_pool[split:]
+        fixture_names = [n for n in names
+                         if n not in kw_strategies and n not in drawn_names]
+
+        @functools.wraps(fn)
+        def wrapper(**fixture_kw):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(_SEED + 7919 * i)
+                call = dict(fixture_kw)
+                for nm, s in zip(drawn_names, arg_strategies):
+                    call[nm] = s.draw(rng)
+                for nm, s in kw_strategies.items():
+                    call[nm] = s.draw(rng)
+                try:
+                    fn(**call)
+                except BaseException:
+                    shown = {nm: call[nm] for nm in call
+                             if nm not in fixture_kw}
+                    print(f"\n[_hyp_fallback] failing example #{i}: "
+                          f"{shown!r}")
+                    raise
+        wrapper.__signature__ = inspect.Signature(
+            [sig.parameters[n] for n in fixture_names])
+        return wrapper
+    return deco

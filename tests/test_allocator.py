@@ -1,9 +1,14 @@
-"""Unified memory allocator + buddy pool invariants (hypothesis-driven)."""
+"""Unified memory allocator + buddy pool invariants (hypothesis-driven;
+falls back to seeded random sequences when hypothesis is not installed)."""
 
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # tier-1 container has none
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.allocator import AllocatorConfig, UnifiedAllocator
 from repro.core.buddy import BuddyAllocator

@@ -1,0 +1,284 @@
+"""Cluster layer: router conservation, goodput accounting, autoscaler
+floor/role invariants, and the stepped-instance refactor's equivalence
+with the monolithic run loop."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
+                                   InstanceSnapshot)
+from repro.core.cluster import ClusterConfig, ClusterSim, simulate_cluster
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.router import ClusterRouter, RouterConfig
+from repro.core.simulator import DecodeInstanceSim, SimConfig
+from repro.serving.request import Request
+from repro.serving.trace import TraceConfig, generate, generate_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hyp_fallback import given, settings, strategies as st
+
+LLAMA = get_config("llama3-8b")
+
+
+def _cluster_run(mode="harli", scenario="steady", duration=25.0, rps=8.0,
+                 n=2, autoscale=True, policy="least_loaded", seed=2):
+    reqs = generate_scenario(scenario, duration, rps, seed=seed - 1)
+    return simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode=mode, seed=seed),
+        ClusterConfig(n_initial=n, autoscale=autoscale,
+                      router=RouterConfig(policy=policy)))
+
+
+@pytest.fixture(scope="module")
+def harli_res():
+    return _cluster_run("harli")
+
+
+@pytest.fixture(scope="module")
+def separate_res():
+    return _cluster_run("separate")
+
+
+# -------------------------------------------------------------- router ---
+@pytest.mark.parametrize("policy", ["least_loaded", "round_robin", "random"])
+def test_router_conservation(policy):
+    """Every request is routed exactly once or rejected — checked by the
+    router's own audit plus external accounting."""
+    res = _cluster_run(policy=policy, duration=15.0)
+    s = res.stats
+    assert s.routed + s.rejected == s.offered
+    assert s.completed <= s.routed
+
+
+def test_goodput_never_exceeds_throughput(harli_res, separate_res):
+    for res in (harli_res, separate_res):
+        s = res.stats
+        assert s.goodput <= s.throughput + 1e-12
+        assert 0.0 <= s.slo_attainment <= 1.0
+        assert s.attained <= s.completed
+
+
+def test_cluster_harli_beats_separate_ft(harli_res, separate_res):
+    assert harli_res.ft_throughput > separate_res.ft_throughput
+
+
+def test_cluster_determinism():
+    a = _cluster_run(duration=15.0)
+    b = _cluster_run(duration=15.0)
+    assert a.stats == b.stats
+    assert a.ft_iterations == b.ft_iterations
+    assert [(d.t, d.action, d.target) for d in a.decisions] == \
+        [(d.t, d.action, d.target) for d in b.decisions]
+
+
+def test_router_rejects_when_saturated():
+    """A tiny fleet with a harsh reject threshold must shed load — and the
+    rejected requests never appear on any instance."""
+    reqs = generate(TraceConfig(duration_s=10.0, mean_rps=40.0, seed=3))
+    res = simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=4),
+        ClusterConfig(n_initial=1, autoscale=False,
+                      router=RouterConfig(reject_load=0.5)))
+    s = res.stats
+    assert s.rejected > 0
+    assert s.routed + s.rejected == s.offered
+
+
+def test_removed_instances_retire_and_stop_accruing():
+    """A scale-down drains the instance, then retires it: its clock stops,
+    so it can't keep free-running finetune work on capacity that nominally
+    left the fleet (which would inflate harli ft_throughput)."""
+    duration = 40.0
+    reqs = generate_scenario("steady", duration, 3.0, seed=6)
+    cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=7),
+                    ClusterConfig(n_initial=3))
+    cs.run(reqs, duration)
+    assert cs.router.retired, "low-load run never retired an instance"
+    for inst in cs.router.retired.values():
+        assert inst.drained
+        assert inst.t < duration - cs.cluster.tick_s  # clock froze early
+
+
+def test_saturated_instance_skipped_not_rejected():
+    """Per-instance overload must not shed load while another instance is
+    idle: rejection only fires under global saturation."""
+    sim = SimConfig(mode="harli", seed=0)
+    cm = CostModel(LLAMA, InstanceSpec(tp=sim.tp), seed=7)
+    router = ClusterRouter(RouterConfig(policy="random", reject_load=0.5),
+                           cm)
+    hot = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    cold = DecodeInstanceSim(1, LLAMA, None, sim, None, 1)
+    router.add_instance(hot)
+    router.add_instance(cold)
+    rid = 0
+    while hot.load() <= 0.5:             # saturate instance 0 directly
+        hot.enqueue(Request(rid=10_000 + rid, arrival=0.0, prompt_len=64,
+                            max_new_tokens=8), 0.0)
+        rid += 1
+    for r in range(8):
+        target = router.dispatch(Request(rid=r, arrival=0.0, prompt_len=64,
+                                         max_new_tokens=8), now=0.0)
+        assert target == 1, "routed to (or rejected at) the hot instance"
+
+
+def test_dispatch_least_loaded_prefers_empty_instance():
+    sim = SimConfig(mode="harli", seed=0)
+    cm = CostModel(LLAMA, InstanceSpec(tp=sim.tp), seed=7)
+    router = ClusterRouter(RouterConfig(), cm)
+    a = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    b = DecodeInstanceSim(1, LLAMA, None, sim, None, 1)
+    router.add_instance(a)
+    router.add_instance(b)
+    for rid in range(6):
+        router.dispatch(Request(rid=rid, arrival=0.0, prompt_len=64,
+                                max_new_tokens=8), now=0.0)
+    # least_loaded alternates across the two empty instances
+    assert a.queue_depth == 3 and b.queue_depth == 3
+    router.check_conservation()
+
+
+# ----------------------------------------------------------- autoscaler --
+def _snap(i, role="colocated", load=0.5, active=1, colocatable=True,
+          can_serve=True, draining=False):
+    return InstanceSnapshot(inst_id=i, role=role, load=load, active=active,
+                            colocatable=colocatable, can_serve=can_serve,
+                            draining=draining)
+
+
+def test_autoscaler_never_scales_below_min():
+    a = Autoscaler(AutoscalerConfig(min_decode=1, cooldown_ticks=0))
+    snaps = [_snap(0, load=0.0, active=0)]
+    for t in range(50):
+        d = a.evaluate(float(t), snaps, viol_frac=0.0, ft_backlog=0.0)
+        assert d.action != "remove_instance"
+        assert d.action != "to_finetune"
+
+
+def test_autoscaler_scales_down_only_above_min():
+    a = Autoscaler(AutoscalerConfig(min_decode=1, cooldown_ticks=0))
+    snaps = [_snap(0, load=0.01, active=0), _snap(1, load=0.02, active=0)]
+    d = a.evaluate(0.0, snaps, viol_frac=0.0, ft_backlog=0.0)
+    assert d.action == "remove_instance"
+    assert d.target == 0                       # least loaded goes first
+
+
+def test_autoscaler_sheds_finetune_before_scaling_up():
+    a = Autoscaler(AutoscalerConfig(cooldown_ticks=0))
+    snaps = [_snap(0, load=0.9), _snap(1, load=0.95)]
+    d = a.evaluate(0.0, snaps, viol_frac=0.10, ft_backlog=1.0)
+    assert d.action == "to_decode" and d.target == 1
+    snaps = [_snap(0, role="decode", load=0.9),
+             _snap(1, role="decode", load=0.95)]
+    d = a.evaluate(1.0, snaps, viol_frac=0.10, ft_backlog=1.0)
+    assert d.action == "add_instance"
+
+
+def test_autoscaler_resumes_colocation_with_headroom():
+    a = Autoscaler(AutoscalerConfig(cooldown_ticks=0))
+    snaps = [_snap(0, role="decode", load=0.4),
+             _snap(1, role="colocated", load=0.5)]
+    d = a.evaluate(0.0, snaps, viol_frac=0.0, ft_backlog=5.0)
+    assert d.action == "to_colocated" and d.target == 0
+
+
+def test_autoscaler_respects_max_decode():
+    a = Autoscaler(AutoscalerConfig(max_decode=2, cooldown_ticks=0))
+    snaps = [_snap(0, role="decode", load=2.0, colocatable=False),
+             _snap(1, role="decode", load=2.0, colocatable=False)]
+    d = a.evaluate(0.0, snaps, viol_frac=0.10, ft_backlog=0.0)
+    assert d.action == "none"
+
+
+def test_autoscaler_cooldown():
+    a = Autoscaler(AutoscalerConfig(min_decode=1, cooldown_ticks=2))
+    snaps = [_snap(i, load=2.0) for i in range(2)]
+    first = a.evaluate(0.0, snaps, viol_frac=0.0, ft_backlog=0.0)
+    assert first.action != "none"
+    for t in (1.0, 2.0):
+        assert a.evaluate(t, snaps, 0.0, 0.0).action == "none"
+    assert a.evaluate(3.0, snaps, 0.0, 0.0).action != "none"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.0, 3.0), st.floats(0.0, 0.3),
+                          st.integers(0, 3)), min_size=1, max_size=30))
+def test_autoscaler_floor_under_random_signals(ticks):
+    """Whatever the signal sequence, the serving floor holds: with the
+    fleet at min_decode the controller never removes or dedicates."""
+    a = Autoscaler(AutoscalerConfig(min_decode=2, cooldown_ticks=0))
+    snaps = [_snap(0), _snap(1)]
+    for t, (load, viol, backlog) in enumerate(ticks):
+        snaps = [_snap(0, load=load, active=int(load > 0.1)),
+                 _snap(1, load=load, active=int(load > 0.1))]
+        d = a.evaluate(float(t), snaps, viol, float(backlog))
+        assert d.action not in ("remove_instance", "to_finetune")
+
+
+def test_cluster_sim_fleet_never_below_min():
+    res = _cluster_run("harli", scenario="spike", duration=30.0, rps=12.0)
+    assert res.fleet_timeline, "no fleet timeline recorded"
+    assert min(n for _, n, _ in res.fleet_timeline) >= 1
+    assert res.final_fleet >= 1
+
+
+def test_cluster_spike_triggers_scale_up():
+    res = _cluster_run("harli", scenario="spike", duration=40.0, rps=12.0,
+                       n=1)
+    assert any(d.action == "add_instance" for d in res.decisions), \
+        [d.action for d in res.decisions]
+    assert res.peak_fleet > 1
+
+
+def test_oversized_request_never_wedges_the_event_loop():
+    """A request too large to ever fit the KV budget must be dropped at
+    admission, not left at the queue head stalling step() forever."""
+    sim = SimConfig(mode="harli", seed=0)
+    inst = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    huge = inst.kv_budget_chunks * inst.alloc.tokens_per_chunk + 10
+    inst.enqueue(Request(rid=0, arrival=0.0, prompt_len=huge,
+                         max_new_tokens=8), ready_time=0.5)
+    ok = Request(rid=1, arrival=0.0, prompt_len=64, max_new_tokens=4)
+    inst.enqueue(ok, ready_time=1.0)
+    for _ in range(10_000):
+        if inst.t >= 10.0:
+            break
+        inst.step(10.0)
+    assert inst.t >= 10.0, "event loop wedged behind oversized request"
+    assert ok.finish > 0, "queued request behind the oversized one starved"
+    assert inst.dropped == 1, "drop not recorded for diagnosis"
+
+
+# ------------------------------------------------- stepped == monolithic --
+def test_step_api_matches_run_wrapper():
+    """Driving an instance event-by-event from outside must reproduce the
+    run() wrapper exactly (same requests, same clock, same rounds)."""
+    sim = SimConfig(mode="harli", seed=0)
+    reqs_a = generate(TraceConfig(duration_s=10.0, mean_rps=6.0, seed=5))
+    reqs_b = generate(TraceConfig(duration_s=10.0, mean_rps=6.0, seed=5))
+    ready_a = {r.rid: r.arrival + 0.05 for r in reqs_a}
+    ready_b = {r.rid: r.arrival + 0.05 for r in reqs_b}
+
+    from repro.core.predictor import TwoStageLatencyPredictor
+    pred = TwoStageLatencyPredictor(k_max=sim.k_max)
+    pred.fit_from_costmodel(CostModel(LLAMA, InstanceSpec(tp=sim.tp),
+                                      seed=13))
+
+    a = DecodeInstanceSim(0, LLAMA, LLAMA, sim, pred, 3)
+    a.run(reqs_a, ready_a, 15.0)
+
+    b = DecodeInstanceSim(0, LLAMA, LLAMA, sim, pred, 3)
+    for r in reqs_b:
+        b.enqueue(r, ready_b[r.rid])
+    t = 0.0
+    while t < 15.0:                      # external loop in small epochs
+        t = min(t + 0.25, 15.0)
+        while b.t < t:
+            b.step(t)
+    b.collect_tpot()
+
+    assert a.rounds == b.rounds
+    assert a.result_tpot == b.result_tpot
+    assert a.quantum_timeline == b.quantum_timeline
+    assert [r.finish for r in reqs_a] == [r.finish for r in reqs_b]

@@ -1,0 +1,113 @@
+"""QoS-scheduler invariants (paper §6): the quantum never predicts past the
+QoS budget, the safety margin adapts downward on violations but is floored,
+and idle rounds free-run the finetune job."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.scheduler import QoSScheduler, SchedulerConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hyp_fallback import given, settings, strategies as st
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    pred = TwoStageLatencyPredictor(k_max=10)
+    cm = CostModel(get_config("llama3-8b"), InstanceSpec(tp=2), seed=5)
+    pred.fit_from_costmodel(cm)
+    return pred
+
+
+def _sched(predictor, **kw):
+    return QoSScheduler(predictor, SchedulerConfig(**kw))
+
+
+# ---------------------------------------------------------- pick() bound --
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 60), st.integers(64, 4096),
+                          st.integers(1, 10)), min_size=1, max_size=50))
+def test_pick_never_exceeds_budget(predictor, rounds):
+    """Whatever the load, pick() only returns k > 0 when the *predicted*
+    co-located latency fits inside qos_s x margin."""
+    s = _sched(predictor)
+    for bs, ctx, avail in rounds:
+        d = s.pick(bs, float(ctx), ft_ready=True, ft_units_available=avail)
+        assert 0 <= d.k <= min(s.cfg.k_max, avail)
+        if d.k > 0:
+            assert d.predicted_s <= s.cfg.qos_s * s.margin + 1e-12, \
+                (d.k, d.predicted_s, s.margin)
+            assert d.reason == "ok"
+        else:
+            assert d.reason in ("qos", "stalled")
+
+
+def test_pick_zero_when_stalled(predictor):
+    s = _sched(predictor)
+    d = s.pick(8, 512.0, ft_ready=False, ft_units_available=0)
+    assert d.k == 0 and d.reason == "stalled"
+    d = s.pick(8, 512.0, ft_ready=True, ft_units_available=0)
+    assert d.k == 0 and d.reason == "stalled"
+
+
+def test_idle_rounds_free_run(predictor):
+    """bs == 0: the finetune quantum takes every available unit."""
+    s = _sched(predictor)
+    d = s.pick(0, 0.0, ft_ready=True, ft_units_available=10)
+    assert d.k == s.cfg.k_max and d.reason == "idle"
+    d = s.pick(0, 0.0, ft_ready=True, ft_units_available=3)
+    assert d.k == 3 and d.reason == "idle"
+    d = s.pick(0, 0.0, ft_ready=False, ft_units_available=0)
+    assert d.k == 0
+
+
+# ------------------------------------------------------- margin feedback --
+def test_margin_shrinks_on_violations_with_floor(predictor):
+    s = _sched(predictor)
+    m0 = s.margin
+    s.observe(s.cfg.qos_s * 1.5)
+    assert s.margin == pytest.approx(m0 - s.cfg.margin_adapt)
+    for _ in range(100):
+        s.observe(s.cfg.qos_s * 1.5)
+    assert s.margin == pytest.approx(s.cfg.margin_floor)
+    assert s.violations == 101
+
+
+def test_margin_recovers_slowly_and_caps_at_safety(predictor):
+    s = _sched(predictor)
+    for _ in range(5):
+        s.observe(s.cfg.qos_s * 2.0)
+    lo = s.margin
+    assert lo < s.cfg.safety
+    for _ in range(1000):
+        s.observe(s.cfg.qos_s * 0.5)        # well under budget
+    assert lo < s.margin <= s.cfg.safety + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.0, 0.2), min_size=1, max_size=200))
+def test_margin_always_within_bounds(predictor, latencies):
+    s = _sched(predictor)
+    for lat in latencies:
+        s.observe(lat)
+        assert s.cfg.margin_floor - 1e-12 <= s.margin \
+            <= s.cfg.safety + 1e-12
+
+
+def test_tighter_margin_never_picks_larger_quantum(predictor):
+    """Monotonicity: after violations shrink the margin, the chosen k at a
+    fixed operating point can only stay equal or decrease."""
+    s_fresh = _sched(predictor)
+    s_burnt = _sched(predictor)
+    for _ in range(6):
+        s_burnt.observe(s_burnt.cfg.qos_s * 2.0)
+    for bs, ctx in ((4, 256.0), (12, 1024.0), (24, 2048.0), (48, 4096.0)):
+        k_fresh = s_fresh.pick(bs, ctx, ft_ready=True,
+                               ft_units_available=10).k
+        k_burnt = s_burnt.pick(bs, ctx, ft_ready=True,
+                               ft_units_available=10).k
+        assert k_burnt <= k_fresh, (bs, ctx, k_burnt, k_fresh)

@@ -4,7 +4,11 @@ trace generator statistics."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # tier-1 container has none
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.models import model as MD
 from repro.models.config import ModelConfig

@@ -1,0 +1,79 @@
+"""Seeded end-to-end simulator regression: the paper's headline direction
+(harli > separate on finetune throughput at held decode QoS) plus strict
+determinism — the same seed must reproduce the identical SimResult."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import SimConfig, simulate
+from repro.serving.request import Request
+from repro.serving.trace import TraceConfig, generate
+
+QOS_S = 0.040
+# paper §8.2 reports ≥99% TPOT attainment for Harli; assert with margin
+QOS_ATTAIN_TARGET = 0.97
+
+
+def _trace(seed=1, duration=30.0, rps=4.0):
+    return generate(TraceConfig(duration_s=duration, mean_rps=rps,
+                                seed=seed))
+
+
+def _run(mode, seed=2, trace_seed=1):
+    llama = get_config("llama3-8b")
+    reqs = _trace(seed=trace_seed)
+    return simulate(llama, llama, reqs,
+                    SimConfig(mode=mode, qos_s=QOS_S, seed=seed))
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {m: _run(m) for m in ("harli", "separate")}
+
+
+def test_harli_beats_separate_ft_throughput(results):
+    h, s = results["harli"], results["separate"]
+    assert h.ft_throughput > s.ft_throughput, \
+        (h.ft_throughput, s.ft_throughput)
+
+
+def test_harli_keeps_decode_qos(results):
+    h = results["harli"]
+    assert h.tpot, "no decode TPOT samples collected"
+    attained = 1.0 - h.qos_violation_frac
+    assert attained >= QOS_ATTAIN_TARGET, attained
+
+
+def test_all_requests_complete(results):
+    n = len(_trace())
+    for mode, res in results.items():
+        assert res.completed == n, (mode, res.completed, n)
+
+
+def test_finetune_makes_progress_in_all_modes(results):
+    for mode, res in results.items():
+        assert res.ft_iterations > 0, mode
+        assert res.ft_units_done > 0, mode
+
+
+def _comparable(res):
+    """SimResult minus the predictor report (an object without __eq__)."""
+    d = dataclasses.asdict(res)
+    d.pop("predictor_report")
+    return d
+
+
+def test_determinism_same_seed_identical_result():
+    a = _run("harli", seed=4, trace_seed=3)
+    b = _run("harli", seed=4, trace_seed=3)
+    assert _comparable(a) == _comparable(b)
+
+
+def test_different_seed_differs():
+    """Sanity check that the determinism test has teeth: noise seeds do
+    change the fine-grained result."""
+    a = _run("harli", seed=4, trace_seed=3)
+    b = _run("harli", seed=5, trace_seed=3)
+    assert _comparable(a) != _comparable(b)

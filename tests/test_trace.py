@@ -1,0 +1,114 @@
+"""Trace generator: per-seed determinism, length caps, and the intended
+load shapes of the multi-tenant scenario presets."""
+
+import numpy as np
+import pytest
+
+from repro.serving.trace import (SCENARIOS, TraceConfig, controlled_load,
+                                 generate, generate_scenario, peak_rps,
+                                 scenario_config)
+
+
+def _sig(reqs):
+    return [(r.rid, round(r.arrival, 9), r.prompt_len, r.max_new_tokens)
+            for r in reqs]
+
+
+# ------------------------------------------------------------ generator --
+def test_determinism_per_seed():
+    cfg = TraceConfig(duration_s=120.0, seed=7)
+    assert _sig(generate(cfg)) == _sig(generate(cfg))
+    assert _sig(generate(cfg)) != _sig(generate(
+        TraceConfig(duration_s=120.0, seed=8)))
+
+
+def test_caps_and_positivity():
+    cfg = TraceConfig(duration_s=300.0, prompt_max=2048, output_max=256,
+                      prompt_sigma=2.0, output_sigma=2.0, seed=3)
+    reqs = generate(cfg)
+    assert reqs, "empty trace"
+    for r in reqs:
+        assert 1 <= r.prompt_len <= cfg.prompt_max
+        assert 1 <= r.max_new_tokens <= cfg.output_max
+        assert 0.0 < r.arrival < cfg.duration_s
+    # rids are unique and ordered with arrivals
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+    assert all(a.arrival <= b.arrival for a, b in zip(reqs, reqs[1:]))
+
+
+def test_mean_rate_roughly_matches():
+    cfg = TraceConfig(duration_s=600.0, mean_rps=5.0, rate_amplitude=0.0,
+                      burstiness=1.0, seed=11)
+    reqs = generate(cfg)
+    rate = len(reqs) / cfg.duration_s
+    assert 4.0 < rate < 6.0, rate
+
+
+def test_controlled_load_phases():
+    reqs = controlled_load(phases=((8, 20.0), (42, 20.0)), seed=2)
+    early = [r for r in reqs if r.arrival < 20.0]
+    late = [r for r in reqs if r.arrival >= 20.0]
+    assert len(late) > 2 * len(early)
+
+
+# ------------------------------------------------------------- presets ---
+def test_scenario_registry_complete():
+    for name in SCENARIOS:
+        reqs = generate_scenario(name, duration_s=120.0, seed=5)
+        assert reqs, name
+    with pytest.raises(ValueError):
+        scenario_config("no-such-scenario")
+
+
+def test_scenario_determinism():
+    for name in SCENARIOS:
+        a = generate_scenario(name, duration_s=120.0, seed=5)
+        b = generate_scenario(name, duration_s=120.0, seed=5)
+        assert _sig(a) == _sig(b), name
+
+
+def test_spike_peak_exceeds_steady():
+    steady = generate_scenario("steady", duration_s=300.0, mean_rps=5.0,
+                               seed=9)
+    spike = generate_scenario("spike", duration_s=300.0, mean_rps=5.0,
+                              seed=9)
+    assert peak_rps(spike) > 1.5 * peak_rps(steady), \
+        (peak_rps(spike), peak_rps(steady))
+    # the crowd sits inside the configured window
+    cfg = scenario_config("spike", 300.0, 5.0, 9)
+    lo = cfg.spike_start_frac * cfg.duration_s
+    hi = lo + cfg.spike_dur_frac * cfg.duration_s
+    inside = [r for r in spike if lo <= r.arrival < hi]
+    density_in = len(inside) / (hi - lo)
+    density_out = (len(spike) - len(inside)) / (cfg.duration_s - (hi - lo))
+    assert density_in > 2 * density_out
+
+
+def test_diurnal_has_wider_rate_swing_than_steady():
+    def swing(reqs, duration, bins=10):
+        hist, _ = np.histogram([r.arrival for r in reqs],
+                               bins=bins, range=(0, duration))
+        return hist.max() - hist.min()
+
+    steady = generate_scenario("steady", duration_s=600.0, seed=13)
+    diurnal = generate_scenario("diurnal", duration_s=600.0, seed=13)
+    assert swing(diurnal, 600.0) > 2 * swing(steady, 600.0)
+
+
+def test_heavy_tail_has_fatter_length_tail():
+    steady = generate_scenario("steady", duration_s=600.0, seed=17)
+    heavy = generate_scenario("heavy_tail", duration_s=600.0, seed=17)
+
+    def p99_over_median(reqs):
+        lens = np.array([r.max_new_tokens for r in reqs], float)
+        return np.percentile(lens, 99) / max(np.median(lens), 1.0)
+
+    assert p99_over_median(heavy) > p99_over_median(steady)
+
+
+def test_peak_rps_helper():
+    from repro.serving.request import Request
+    assert peak_rps([]) == 0.0
+    reqs = [Request(rid=i, arrival=float(i), prompt_len=8,
+                    max_new_tokens=8) for i in range(100)]
+    assert peak_rps(reqs, window_s=10.0) == pytest.approx(1.1)  # 11 in 10s
