@@ -277,7 +277,7 @@ def sec88_overhead():
          f"|peak_mb={b.peak_bytes/2**20:.1f}")
 
 
-# Beyond-paper: cluster goodput under the router + autoscaler layer
+# Beyond-paper: cluster goodput under the two-tier routing plane
 # (core/cluster.py) across the multi-tenant scenario presets. Goodput is
 # DistServe's SLO-attaining throughput; harli must hold it while adding
 # finetune throughput the separate fleet can't match.
@@ -299,7 +299,118 @@ def cluster_goodput(duration_s: float = 90.0):
                  f"goodput={s.goodput:.2f}|thr={s.throughput:.2f}"
                  f"|attain={s.slo_attainment:.3f}"
                  f"|ft={res.ft_throughput:.2f}"
-                 f"|fleet={res.final_fleet}/{res.peak_fleet}")
+                 f"|fleet={res.final_fleet}/{res.peak_fleet}"
+                 f"|prefill={res.final_prefill}/{res.peak_prefill}")
+
+
+# Beyond-paper: fleet timeline (serving / colocated / prefill workers) vs
+# windowed goodput over time, harli vs separate, under the spike scenario —
+# the ROADMAP "paper-figures plot" item. Writes a PNG next to the CSV rows
+# when matplotlib is available; the CSV timeline is always printed.
+def cluster_fleet_timeline(duration_s: float = 90.0):
+    import os
+
+    from repro.core.cluster import ClusterConfig, ClusterSim
+    from repro.core.router import RouterConfig, request_slo
+    from repro.core.simulator import SimConfig
+    from repro.serving.trace import generate_scenario
+
+    win = max(duration_s / 18.0, 2.5)       # goodput window (s)
+    series = {}
+    for mode in ("separate", "harli"):
+        reqs = generate_scenario("spike", duration_s, mean_rps=10.0,
+                                 seed=31)
+        cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode=mode, seed=32),
+                        ClusterConfig(
+                            n_initial=2,
+                            router=RouterConfig(
+                                policy="predicted_latency")))
+        res = cs.run(reqs, duration_s)
+        finishes = []
+        for inst in cs.router.all_instances():
+            for r in inst.all_reqs:
+                if r.finish < 0 or not r.token_times:
+                    continue
+                ttft_ok, tpot_ok, _, _ = request_slo(r, cs.router.cfg)
+                if ttft_ok and tpot_ok:
+                    finishes.append(r.finish)
+        finishes = np.asarray(sorted(finishes))
+        edges = np.arange(0.0, duration_s + win, win)
+        good = np.histogram(finishes, bins=edges)[0] / win
+        series[mode] = dict(res=res, edges=edges, good=good)
+        for t, n_serv, n_colo in res.fleet_timeline[::5]:
+            pf = 0
+            for tp, n_pf, _ in res.prefill_timeline:
+                if tp <= t:
+                    pf = n_pf
+            _row(f"cluster_fleet_timeline,{mode},t={t:.0f}", 0,
+                 f"serving={n_serv}|colocated={n_colo}|prefill={pf}")
+        _row(f"cluster_fleet_timeline,{mode}.goodput", 0,
+             f"peak={good.max():.2f}|mean={good.mean():.2f}|window_s={win:g}")
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        _row("cluster_fleet_timeline.png", 0, "skipped_no_matplotlib")
+        return
+
+    # palette: categorical slots 1-3 for the fleet series, violet for the
+    # single-series goodput panels; light surface, recessive grid
+    C = {"serving": "#2a78d6", "colocated": "#eb6834",
+         "prefill": "#1baf7a", "goodput": "#4a3aa7",
+         "ink": "#0b0b0b", "ink2": "#52514e", "grid": "#e4e3df",
+         "surface": "#fcfcfb"}
+    fig, axes = plt.subplots(2, 2, figsize=(9.6, 5.4), sharex=True,
+                             facecolor=C["surface"])
+    for col, mode in enumerate(("harli", "separate")):
+        res = series[mode]["res"]
+        ax = axes[0][col]
+        t = [p[0] for p in res.fleet_timeline]
+        ends = []                    # (end value, key) for label dodging
+        for key, vals in (
+                ("serving", [p[1] for p in res.fleet_timeline]),
+                ("colocated", [p[2] for p in res.fleet_timeline]),
+                ("prefill", [p[1] for p in res.prefill_timeline])):
+            if vals:
+                ax.plot(t[:len(vals)], vals, drawstyle="steps-post",
+                        lw=2, color=C[key], label=key)
+                ends.append((vals[-1], t[len(vals) - 1], key))
+        # direct end labels, dodged vertically when lines coincide
+        ends.sort()
+        for i, (v, tx, key) in enumerate(ends):
+            prior = [e for e in ends[:i] if e[0] == v]
+            ax.annotate(key, (tx, v),
+                        xytext=(4, 9 * len(prior)),
+                        textcoords="offset points",
+                        fontsize=8, color=C[key], va="center")
+        ax.set_title(f"{mode} — fleet size", fontsize=10, color=C["ink"])
+        ax.set_ylabel("instances / workers", fontsize=8.5)
+        ax.legend(fontsize=8, frameon=False, loc="upper left")
+        ax2 = axes[1][col]
+        edges, good = series[mode]["edges"], series[mode]["good"]
+        ax2.plot(edges[:-1], good, drawstyle="steps-post", lw=2,
+                 color=C["goodput"])
+        ax2.set_title(f"{mode} — goodput (SLO-attaining req/s, "
+                      f"{win:g}s windows)", fontsize=10, color=C["ink"])
+        ax2.set_xlabel("time (s)", fontsize=8.5)
+        ax2.set_ylabel("req/s", fontsize=8.5)
+    for ax in axes.flat:
+        ax.set_facecolor(C["surface"])
+        ax.grid(color=C["grid"], lw=0.6)
+        ax.tick_params(labelsize=8, colors=C["ink2"])
+        for s in ax.spines.values():
+            s.set_color(C["grid"])
+    fig.suptitle("Two-tier cluster under a flash crowd: fleet timeline vs "
+                 "goodput", fontsize=11, color=C["ink"])
+    fig.tight_layout()
+    out_dir = os.path.join(os.path.dirname(__file__), "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "cluster_fleet_timeline.png")
+    fig.savefig(path, dpi=150, facecolor=C["surface"])
+    plt.close(fig)
+    _row("cluster_fleet_timeline.png", 0, path)
 
 
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
@@ -307,4 +418,4 @@ ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
-       cluster_goodput]
+       cluster_goodput, cluster_fleet_timeline]

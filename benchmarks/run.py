@@ -28,6 +28,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     t_all = time.time()
+    failed = []
     for fn in F.ALL:
         if args.only and args.only not in fn.__name__:
             continue
@@ -39,12 +40,15 @@ def main() -> None:
                 fn(duration_s=45.0)
             elif args.quick and fn.__name__ == "cluster_goodput":
                 fn(duration_s=40.0)
+            elif args.quick and fn.__name__ == "cluster_fleet_timeline":
+                fn(duration_s=40.0)
             else:
                 fn()
             print(f"# {fn.__name__}: {time.time()-t0:.1f}s")
         except Exception as e:
             print(f"# {fn.__name__} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+            failed.append(fn.__name__)
 
     if not args.only or "roofline" in args.only:
         try:
@@ -65,7 +69,11 @@ def main() -> None:
                       "repro.launch.dryrun first)")
         except Exception as e:
             print(f"# roofline FAILED: {type(e).__name__}: {e}")
+            failed.append("roofline")
     print(f"# total: {time.time()-t_all:.1f}s")
+    if failed:
+        # a figure crash must fail the process (CI smokes this path)
+        raise SystemExit(f"FAILED figures: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,17 @@
 """Cluster-scale experiment in one command: route a multi-tenant trace
-across a fleet of decode instances with the global router + autoscaler and
-compare harli co-location against a separate-fleet deployment on cluster
-goodput (DistServe's SLO-attaining throughput), QoS attainment and finetune
+through the two-tier plane (admission -> disaggregated prefill pool ->
+decode fleet) with the global router + two-loop autoscaler and compare
+harli co-location against a separate-fleet deployment on cluster goodput
+(DistServe's SLO-attaining throughput), QoS attainment and finetune
 throughput.
 
     PYTHONPATH=src python examples/cluster_sim.py \
         [--scenario spike] [--duration 60] [--rps 10] [--instances 2] \
-        [--policy least_loaded] [--no-autoscale]
+        [--policy predicted_latency] [--prefill-workers 2] \
+        [--sessions 32] [--no-autoscale]
+
+``--prefill-workers 0`` falls back to PR 1's per-instance serialized
+prefill chain — the baseline the disaggregated pool is measured against.
 """
 
 import argparse
@@ -14,7 +19,8 @@ import argparse
 from repro.configs import get_config
 from repro.core.autoscaler import AutoscalerConfig
 from repro.core.cluster import ClusterConfig, simulate_cluster
-from repro.core.router import RouterConfig
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.router import POLICIES, RouterConfig
 from repro.core.simulator import SimConfig
 from repro.serving.trace import SCENARIOS, generate_scenario, peak_rps
 
@@ -25,8 +31,14 @@ def main():
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--rps", type=float, default=10.0)
     ap.add_argument("--instances", type=int, default=2)
-    ap.add_argument("--policy", default="least_loaded",
-                    choices=("least_loaded", "round_robin", "random"))
+    ap.add_argument("--policy", default="least_loaded", choices=POLICIES)
+    ap.add_argument("--prefill-workers", type=int, default=2,
+                    help="initial prefill-pool size; 0 = legacy "
+                         "per-instance prefill chain")
+    ap.add_argument("--prefill-ordering", default="edf",
+                    choices=("edf", "fifo"))
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="sticky sessions in the trace (session_affinity)")
     ap.add_argument("--inf", default="llama3-8b")
     ap.add_argument("--ft", default="llama3-8b")
     ap.add_argument("--qos-ms", type=float, default=40.0)
@@ -36,18 +48,26 @@ def main():
     args = ap.parse_args()
 
     cfg_i, cfg_f = get_config(args.inf), get_config(args.ft)
+    n_sessions = args.sessions
+    if args.policy == "session_affinity" and n_sessions == 0:
+        n_sessions = 32          # affinity needs sessions to stick to
     probe = generate_scenario(args.scenario, args.duration, args.rps,
-                              seed=args.seed + 1)
+                              seed=args.seed + 1, n_sessions=n_sessions)
+    prefill = None if args.prefill_workers <= 0 else PrefillPoolConfig(
+        n_workers=args.prefill_workers, ordering=args.prefill_ordering)
+    tier = (f"pool({args.prefill_workers},{args.prefill_ordering})"
+            if prefill else "per-instance chain")
     print(f"scenario={args.scenario}: {len(probe)} requests over "
           f"{args.duration:.0f}s (mean {len(probe)/args.duration:.1f} rps, "
           f"peak {peak_rps(probe):.1f} rps)  fleet_0={args.instances}  "
-          f"policy={args.policy}  autoscale={not args.no_autoscale}")
+          f"policy={args.policy}  prefill={tier}  "
+          f"autoscale={not args.no_autoscale}")
     print(f"SLOs: TTFT<={args.ttft_slo:.1f}s TPOT<={args.qos_ms:.0f}ms\n")
 
     out = {}
     for mode in ("separate", "harli"):
         reqs = generate_scenario(args.scenario, args.duration, args.rps,
-                                 seed=args.seed + 1)
+                                 seed=args.seed + 1, n_sessions=n_sessions)
         res = simulate_cluster(
             cfg_i, cfg_f, reqs,
             SimConfig(mode=mode, qos_s=args.qos_ms / 1e3,
@@ -55,6 +75,7 @@ def main():
             ClusterConfig(
                 n_initial=args.instances,
                 autoscale=not args.no_autoscale,
+                prefill=prefill,
                 router=RouterConfig(policy=args.policy,
                                     ttft_slo_s=args.ttft_slo,
                                     tpot_slo_s=args.qos_ms / 1e3),
@@ -69,6 +90,13 @@ def main():
               f"TPOT-attain={s.tpot_attainment*100:5.1f}% "
               f"rejected={s.rejected}  "
               f"QoS-violations={res.qos_violation_frac*100:5.2f}%")
+        if prefill:
+            print(f"{'':9s} TTFT p99={s.ttft_p99:5.2f}s = "
+                  f"queue {s.ttft_queue_p99:.2f} + "
+                  f"prefill {s.ttft_prefill_p99:.2f} + "
+                  f"decode-wait {s.ttft_decode_wait_p99:.2f} (stage p99s)  "
+                  f"prefill-pool={res.final_prefill} final / "
+                  f"{res.peak_prefill} peak")
         print(f"{'':9s} ft_throughput={res.ft_throughput:6.2f} "
               f"(iters/s x batch)  fleet={res.final_fleet} final / "
               f"{res.peak_fleet} peak  scale-actions={len(acts)} "

@@ -16,6 +16,14 @@ reconfiguration). Actions:
                             instance to finetune until load returns
   * ``none``
 
+A second, independent control loop (``evaluate_prefill``) sizes the
+disaggregated prefill pool (core/prefill_pool.py): grow on TTFT headroom
+loss or queue depth, shrink on deep idle, and never below a floor that is
+*coordinated* with the decode loop — ``prefill_per_decode`` workers per
+serving instance — so the two tiers move together when the fleet scales.
+Actions: ``add_prefill`` / ``remove_prefill``, logged in the same decision
+stream.
+
 The controller is pure policy: it never touches instances itself, the
 cluster event loop (core/cluster.py) applies decisions. That keeps the
 invariants testable — e.g. it can never emit ``remove_instance`` or
@@ -26,10 +34,12 @@ serving instances.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 ACTIONS = ("none", "add_instance", "remove_instance",
-           "to_decode", "to_colocated", "to_finetune")
+           "to_decode", "to_colocated", "to_finetune",
+           "add_prefill", "remove_prefill")
 
 
 @dataclasses.dataclass
@@ -44,6 +54,16 @@ class AutoscalerConfig:
     idle_load_ft: float = 0.05       # below (and backlog) -> dedicate to ft
     ft_target_iters_per_s: float = 0.0   # finetune demand; 0 = best-effort
     cooldown_ticks: int = 2          # ticks to wait after any action
+    # ---- prefill-pool loop (coordinated with the decode loop: the pool
+    # floor tracks the serving fleet so the two tiers move together,
+    # ByteDance arXiv 2508.19559-style joint scaling against SLO headroom)
+    min_prefill: int = 1             # pool hard floor
+    max_prefill: int = 16
+    prefill_per_decode: float = 1.0  # coordinated floor: ceil(r * serving)
+    prefill_queue_hi: float = 2.0    # queued per worker above -> grow
+    ttft_headroom: float = 0.6       # wait_p99 above frac*TTFT-SLO -> grow
+    prefill_idle_backlog_s: float = 0.05  # backlog below + empty -> shrink
+    prefill_cooldown_ticks: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +90,8 @@ class Autoscaler:
         self.cfg = cfg
         self.decisions: List[ScaleDecision] = []
         self._cooldown = 0
+        self._prefill_cooldown = 0
+        self.prefill_ttft_slo_s = 4.0   # set by the cluster (RouterConfig)
 
     # ------------------------------------------------------------ policy --
     def _decide(self, t: float, snaps: List[InstanceSnapshot],
@@ -140,6 +162,62 @@ class Autoscaler:
             d = self._decide(t, snaps, viol_frac, ft_backlog)
             if d.action != "none":
                 self._cooldown = self.cfg.cooldown_ticks
+        assert d.action in ACTIONS
+        self.decisions.append(d)
+        return d
+
+    # -------------------------------------------------- prefill-pool loop --
+    def prefill_floor(self, n_serving: int) -> int:
+        """Coordinated pool floor: the prefill tier tracks the decode tier
+        (``prefill_per_decode`` workers per serving instance) so a decode
+        scale-up pulls prefill capacity with it instead of waiting for the
+        queue to back up first."""
+        cfg = self.cfg
+        floor = max(cfg.min_prefill,
+                    math.ceil(cfg.prefill_per_decode * n_serving))
+        return min(floor, cfg.max_prefill)
+
+    def _decide_prefill(self, t: float, snap, n_serving: int
+                        ) -> ScaleDecision:
+        """snap: PrefillPoolSnapshot (core/prefill_pool.py) — kept untyped
+        here so the controller stays importable without the pool module."""
+        cfg = self.cfg
+        n = snap.n_workers
+        floor = self.prefill_floor(n_serving)
+        if n < floor:
+            return ScaleDecision(t, "add_prefill",
+                                 reason=f"floor={floor} serving={n_serving}")
+        # TTFT headroom / queue pressure -> grow
+        slo = self.prefill_ttft_slo_s
+        if n < cfg.max_prefill:
+            if snap.queue_depth > cfg.prefill_queue_hi * max(n, 1):
+                return ScaleDecision(t, "add_prefill",
+                                     reason=f"queue={snap.queue_depth}")
+            if slo > 0 and snap.wait_p99 > cfg.ttft_headroom * slo:
+                return ScaleDecision(
+                    t, "add_prefill",
+                    reason=f"wait_p99={snap.wait_p99:.2f}")
+        # deep idle above the coordinated floor -> shrink
+        if n > floor and snap.queue_depth == 0 \
+                and snap.backlog_s <= cfg.prefill_idle_backlog_s \
+                and (slo <= 0 or snap.wait_p99 <
+                     0.5 * cfg.ttft_headroom * slo):
+            return ScaleDecision(t, "remove_prefill",
+                                 reason=f"idle backlog={snap.backlog_s:.2f}")
+        return ScaleDecision(t, "none")
+
+    def evaluate_prefill(self, t: float, snap, n_serving: int
+                         ) -> ScaleDecision:
+        """One prefill-pool control tick (second loop). Own cooldown so a
+        decode action never starves the pool of attention; decisions land
+        in the same log as the decode loop's."""
+        if self._prefill_cooldown > 0:
+            self._prefill_cooldown -= 1
+            d = ScaleDecision(t, "none", reason="prefill cooldown")
+        else:
+            d = self._decide_prefill(t, snap, n_serving)
+            if d.action != "none":
+                self._prefill_cooldown = self.cfg.prefill_cooldown_ticks
         assert d.action in ACTIONS
         self.decisions.append(d)
         return d

@@ -1,14 +1,25 @@
-"""Cluster simulation: router + autoscaler over stepped decode instances.
+"""Cluster simulation: two-tier routing plane + autoscaler over stepped
+decode instances.
 
 Composes the pieces into one discrete-event experiment:
 
   * a trace of requests arrives at the cluster front door;
-  * ClusterRouter (core/router.py) admits and dispatches each to one
-    decode instance (or rejects it under saturation);
+  * ClusterRouter (core/router.py) admits each request (or rejects it under
+    saturation) into the disaggregated PrefillPool (core/prefill_pool.py):
+    TTFT-deadline-ordered queue, batched prefill on a scalable worker pool;
+  * completed prefills are handed to one decode instance chosen by the
+    routing policy (least_loaded / predicted_latency / session_affinity /
+    round_robin / random);
   * every DecodeInstanceSim advances on a shared clock via its step() API;
-  * the Autoscaler (core/autoscaler.py) runs every control interval and
-    grows/shrinks the fleet or flips instance roles between decode-only,
-    co-located and finetune-dedicated.
+  * the Autoscaler (core/autoscaler.py) runs two coordinated control loops
+    every interval: the decode loop grows/shrinks the fleet or flips roles
+    between decode-only, co-located and finetune-dedicated; the prefill
+    loop sizes the pool against TTFT headroom with a floor that tracks the
+    serving fleet.
+
+``ClusterConfig.prefill = None`` falls back to PR 1's per-instance
+serialized prefill chain — kept as the measurable baseline the
+disaggregated pool is compared against (tests/test_cluster.py).
 
 Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
   harli    — every serving instance co-locates a finetune job, dynamic
@@ -28,10 +39,13 @@ from typing import List, Optional, Tuple
 from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot, ScaleDecision)
 from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.prefill_pool import PrefillPool, PrefillPoolConfig
 from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
 from repro.core.simulator import DecodeInstanceSim, SimConfig, fit_predictor
 from repro.models.config import ModelConfig
 from repro.serving.request import Request
+
+ROUTER_SEED_SALT = 17        # RouterConfig.seed derives from SimConfig.seed
 
 
 @dataclasses.dataclass
@@ -42,6 +56,9 @@ class ClusterConfig:
     router: RouterConfig = dataclasses.field(default_factory=RouterConfig)
     autoscaler: AutoscalerConfig = dataclasses.field(
         default_factory=AutoscalerConfig)
+    # prefill tier: None = legacy per-instance prefill chain (PR 1)
+    prefill: Optional[PrefillPoolConfig] = dataclasses.field(
+        default_factory=PrefillPoolConfig)
 
 
 @dataclasses.dataclass
@@ -55,15 +72,20 @@ class ClusterResult:
     tpot: List[float] = dataclasses.field(default_factory=list)
     fleet_timeline: List[Tuple[float, int, int]] = dataclasses.field(
         default_factory=list)        # (t, serving, colocated)
+    prefill_timeline: List[Tuple[float, int, int]] = dataclasses.field(
+        default_factory=list)        # (t, active workers, queue depth)
     decisions: List[ScaleDecision] = dataclasses.field(default_factory=list)
     # hardware counts: ALL live instances, including separate mode's
     # dedicated finetune one — comparable across modes
     final_fleet: int = 0
     peak_fleet: int = 0
+    final_prefill: int = 0
+    peak_prefill: int = 0
 
 
 class ClusterSim:
-    """Owns the fleet and the shared clock; applies autoscaler decisions."""
+    """Owns the fleet, the prefill pool and the shared clock; applies both
+    autoscaler control loops' decisions."""
 
     def __init__(self, cfg_inf: ModelConfig, cfg_ft: ModelConfig,
                  sim: SimConfig, cluster: ClusterConfig):
@@ -73,12 +95,27 @@ class ClusterSim:
         self.cluster = cluster
         spec = InstanceSpec(tp=sim.tp)
         self.predictor, _ = fit_predictor(cfg_inf, sim)
+        # thread the experiment seed into the router (like the CostModel
+        # seed): an explicit RouterConfig.seed wins, the default derives
+        rcfg = cluster.router
+        if rcfg.seed == 0:
+            rcfg = dataclasses.replace(
+                rcfg, seed=sim.seed + ROUTER_SEED_SALT)
+        pool = None
+        if cluster.prefill is not None:
+            pool = PrefillPool(
+                cluster.prefill, CostModel(cfg_inf, spec, seed=sim.seed + 7),
+                ttft_slo_s=rcfg.ttft_slo_s)
         self.router = ClusterRouter(
-            cluster.router, CostModel(cfg_inf, spec, seed=sim.seed + 7))
+            rcfg, CostModel(cfg_inf, spec, seed=sim.seed + 7),
+            prefill_pool=pool, predictor=self.predictor)
         self.autoscaler = Autoscaler(cluster.autoscaler)
+        self.autoscaler.prefill_ttft_slo_s = rcfg.ttft_slo_s
         self._next_id = 0
         self._fleet_timeline: List[Tuple[float, int, int]] = []
+        self._prefill_timeline: List[Tuple[float, int, int]] = []
         self._peak_total = 0
+        self._peak_prefill = len(pool.workers) if pool is not None else 0
         if sim.mode == "separate":
             for _ in range(max(cluster.n_initial - 1, 1)):
                 self._spawn(0.0, role="decode", colocate=False)
@@ -124,6 +161,18 @@ class ClusterSim:
         if d.action == "add_instance":
             role = "colocated" if self.sim.mode == "harli" else "decode"
             self._spawn(t, role=role, colocate=self.sim.mode == "harli")
+            # coordinated scaling: a decode scale-up pulls the prefill pool
+            # to its floor immediately (the legacy chain got this for free —
+            # every instance carried a chain), instead of waiting a tick
+            pool = self.router.pool
+            if pool is not None:
+                floor = self.autoscaler.prefill_floor(len(self._serving()))
+                while len(pool.active_workers()) < floor:
+                    pool.add_worker(t)
+                    self.autoscaler.decisions.append(ScaleDecision(
+                        t, "add_prefill", reason="coordinated scale-up"))
+                self._peak_prefill = max(self._peak_prefill,
+                                         len(pool.active_workers()))
         elif d.action == "remove_instance":
             inst = insts.get(d.target)
             # guard at application time too: never drain below the floor
@@ -146,10 +195,24 @@ class ClusterSim:
                     self.cluster.autoscaler.min_decode:
                 inst.set_role("finetune")
 
+    def _apply_prefill(self, d: ScaleDecision, t: float) -> None:
+        pool = self.router.pool
+        if pool is None:
+            return
+        if d.action == "add_prefill":
+            pool.add_worker(t)
+            self._peak_prefill = max(self._peak_prefill,
+                                     len(pool.active_workers()))
+        elif d.action == "remove_prefill":
+            # guard at application time: never drain below the hard floor
+            pool.drain_worker(
+                min_workers=max(self.cluster.autoscaler.min_prefill, 1))
+
     # ------------------------------------------------------------- loop --
     def run(self, reqs: List[Request],
             duration: Optional[float] = None) -> ClusterResult:
         cl = self.cluster
+        pool = self.router.pool
         pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
         if duration is None:
             last = max((r.arrival for r in reqs), default=0.0)
@@ -161,17 +224,27 @@ class ClusterSim:
             while qi < len(pending) and pending[qi].arrival <= epoch_end:
                 self.router.dispatch(pending[qi], pending[qi].arrival)
                 qi += 1
+            # prefill stage first: completions in this epoch reach their
+            # decode instance before it steps through the epoch
+            self.router.pump_prefill(epoch_end)
             for inst in list(self.router.instances.values()):
                 while inst.t < epoch_end:
                     inst.step(epoch_end)
                 if inst.drained:
                     self.router.retire(inst.inst_id)
+            if pool is not None:
+                pool.retire_drained(epoch_end)
             if cl.autoscale and epoch_end + 1e-9 >= next_control:
                 d = self.autoscaler.evaluate(
                     epoch_end, self._snapshots(),
                     self.router.recent_violation_frac(),
                     self._ft_backlog(epoch_end))
                 self._apply(d, epoch_end)
+                if pool is not None:
+                    pd = self.autoscaler.evaluate_prefill(
+                        epoch_end, pool.snapshot(epoch_end),
+                        n_serving=len(self._serving()))
+                    self._apply_prefill(pd, epoch_end)
                 next_control += cl.autoscaler.interval_s
             t = epoch_end
             self._fleet_point(t, self._serving())
@@ -184,6 +257,11 @@ class ClusterSim:
              sum(1 for i in serving if i.role == "colocated")))
         self._peak_total = max(self._peak_total,
                                len(self.router.instances))
+        pool = self.router.pool
+        if pool is not None:
+            n_active = len(pool.active_workers())
+            self._prefill_timeline.append((t, n_active, pool.queue_depth))
+            self._peak_prefill = max(self._peak_prefill, n_active)
 
     def _result(self, duration: float) -> ClusterResult:
         for inst in self.router.all_instances():
@@ -199,14 +277,19 @@ class ClusterSim:
         res.ft_throughput = res.ft_iterations / duration * minibatch
         if res.tpot:
             # same limit the router's per-request TPOT attainment uses
-            rcfg = self.cluster.router
+            rcfg = self.router.cfg
             lim = rcfg.tpot_slo_s * rcfg.tpot_slack
             res.qos_violation_frac = \
                 sum(1 for x in res.tpot if x > lim) / len(res.tpot)
         res.fleet_timeline = self._fleet_timeline
+        res.prefill_timeline = self._prefill_timeline
         res.decisions = self.autoscaler.decisions
         res.final_fleet = len(self.router.instances)
         res.peak_fleet = max(self._peak_total, res.final_fleet)
+        pool = self.router.pool
+        if pool is not None:
+            res.final_prefill = len(pool.active_workers())
+            res.peak_prefill = max(self._peak_prefill, res.final_prefill)
         return res
 
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -112,6 +112,26 @@ class CostModel:
             + 4.0 * prompt_len * cfg.effective_cache_len(prompt_len) / 2 \
             * len(cfg.attn_layer_indices()) * cfg.num_heads * cfg.head_dim * bs
         bytes_hbm = active * 2.0 + bs * prompt_len * cfg.d_model * 2 * 8
+        return max(flops / self.inst.peak_flops,
+                   bytes_hbm / self.inst.hbm_bw) + STEP_OVERHEAD_S
+
+    def prefill_batch_latency(self, prompt_lens: Sequence[int]) -> float:
+        """One fused prefill launch over a batch of (possibly ragged)
+        prompts: token work is additive across requests, the weight stream
+        and dispatch overhead are paid once — the batching win the prefill
+        pool (core/prefill_pool.py) schedules for. Reduces exactly to
+        ``prefill_latency(p, bs=1)`` for a single prompt."""
+        if not prompt_lens:
+            return 0.0
+        cfg = self.cfg
+        active = cfg.active_param_count()
+        flops = bytes_hbm = 0.0
+        for p in prompt_lens:
+            flops += 2.0 * active * p \
+                + 4.0 * p * cfg.effective_cache_len(p) / 2 \
+                * len(cfg.attn_layer_indices()) * cfg.num_heads * cfg.head_dim
+            bytes_hbm += p * cfg.d_model * 2 * 8
+        bytes_hbm += active * 2.0
         return max(flops / self.inst.peak_flops,
                    bytes_hbm / self.inst.hbm_bw) + STEP_OVERHEAD_S
 

@@ -1,34 +1,61 @@
-"""Cluster-level request router: global admission + load-aware dispatch.
+"""Cluster-level routing plane: admission -> prefill stage -> decode stage.
 
-Sits above the per-instance QoS machinery (scheduler/allocator/predictor):
-the router decides *which* decode instance serves a request — or rejects it
-when the whole fleet is saturated — while each instance keeps deciding *how*
-to share its chips between decode rounds and finetune quanta.
+Sits above the per-instance QoS machinery (scheduler/allocator/predictor)
+and below the cluster event loop. The plane has two tiers, mirroring the
+PD-disaggregated deployment the paper assumes (§8.1) and DistServe's
+observation that prefill and decode must be scheduled independently:
 
-Design follows DistServe (Zhong et al., OSDI'24): the cluster objective is
-**goodput** — completed requests per second that attain BOTH latency SLOs
-(TTFT for the prefill phase, TPOT for decode) — not raw throughput. The
-router therefore tracks per-request SLO attainment and exposes cluster
-goodput accounting; the autoscaler (core/autoscaler.py) consumes the same
-signals to resize the fleet.
+  1. **Admission** — a request is accepted or rejected against global
+     decode saturation (an instance past ``reject_load`` is skipped as long
+     as any other can absorb; rejection fires only when none can).
+  2. **Prefill stage** — accepted requests enter the shared
+     ``PrefillPool`` (core/prefill_pool.py): TTFT-deadline-ordered queue,
+     batched prefill on a scalable pool of workers.
+  3. **Decode stage** — when a prefill completes, the request is handed to
+     one decode instance chosen by the routing policy; the instance admits
+     it into decode rounds once its ``ready_time`` passes.
+
+Policies:
+  * ``least_loaded``       — join-shortest-queue on the occupancy signal
+  * ``round_robin`` / ``random``
+  * ``predicted_latency``  — pick the instance with the lowest *predicted
+    TPOT* from the fitted TwoStageLatencyPredictor, evaluated at the
+    instance's current batch and finetune quantum (falls back to
+    least_loaded when no predictor is fitted, e.g. separate mode)
+  * ``session_affinity``   — hash ``Request.session_id`` to a sticky
+    instance for prefix-cache reuse, overflowing (and remapping) to the
+    least-loaded instance when the sticky one is past
+    ``affinity_overflow_load``
+
+Constructing the router without a pool (``prefill_pool=None``) keeps PR 1's
+per-instance serialized prefill chain as a measurable baseline — the
+acceptance test demonstrates the disaggregated pool beats it on TTFT p99
+and goodput under the spike scenario.
 
 Conservation invariant (tested): every request handed to ``dispatch`` is
-either enqueued on exactly one instance or rejected — never both, never
-dropped, never duplicated.
+rejected, still in the prefill stage, or enqueued on exactly one decode
+instance — never dropped, never duplicated.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+import math
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.costmodel import CostModel
+from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.prefill_pool import PrefillPool
 from repro.core.simulator import DecodeInstanceSim
 from repro.serving.request import Request
 
-POLICIES = ("least_loaded", "round_robin", "random")
+POLICIES = ("least_loaded", "round_robin", "random",
+            "predicted_latency", "session_affinity")
+
+PENDING = -2     # admitted; still in the prefill stage
+REJECTED = -1
 
 
 @dataclasses.dataclass
@@ -38,14 +65,17 @@ class RouterConfig:
     tpot_slo_s: float = 0.040        # decode SLO, same target the QoS
     tpot_slack: float = 1.05         # scheduler enforces per round
     tpot_quantile: float = 0.99      # per-request attainment percentile
-    reject_load: float = 4.0         # reject when the best target's queue
+    reject_load: float = 4.0         # reject when every target's queue
     seed: int = 0                    # exceeds reject_load x max_slots
+    # session_affinity: sticky instance absorbs its sessions until its load
+    # passes this threshold, then the session remaps to the least loaded
+    affinity_overflow_load: float = 1.0
 
 
 @dataclasses.dataclass
 class RoutedRequest:
     rid: int
-    instance: int                    # -1 = rejected at admission
+    instance: int                    # -1 rejected, -2 in prefill stage
     arrival: float
 
 
@@ -65,27 +95,53 @@ class ClusterStats:
     tpot_attainment: float = 0.0
     ttft_p99: float = 0.0
     tpot_p99: float = 0.0
+    # TTFT stage accounting (pool mode): queue wait, prefill compute and
+    # decode-admission wait are separately visible, so an SLO miss can be
+    # attributed to the tier that caused it
+    ttft_queue_p99: float = 0.0      # arrival -> prefill start
+    ttft_prefill_p99: float = 0.0    # prefill start -> prefill done
+    ttft_decode_wait_p99: float = 0.0  # prefill done -> first decode token
+
+
+def request_slo(r: Request, cfg: RouterConfig):
+    """Per-request SLO verdict: (ttft_ok, tpot_ok, ttft, tpot_percentile).
+    THE attainment definition — ClusterRouter.stats and every figure that
+    plots goodput over time must agree on it, so it lives in one place.
+    Only meaningful for completed requests (finish >= 0, tokens emitted)."""
+    ttft = r.token_times[0] - r.arrival
+    samples = r.tpot_samples()
+    tpot_p = float(np.percentile(samples, cfg.tpot_quantile * 100)) \
+        if samples else 0.0
+    ttft_ok = ttft <= cfg.ttft_slo_s
+    tpot_ok = tpot_p <= cfg.tpot_slo_s * cfg.tpot_slack
+    return ttft_ok, tpot_ok, ttft, tpot_p
 
 
 class ClusterRouter:
-    """Load-aware dispatcher over a mutable fleet of DecodeInstanceSim.
+    """Two-stage dispatcher over a mutable fleet of DecodeInstanceSim.
 
     The fleet is shared with the cluster event loop and the autoscaler:
     instances may be added, put into draining, or have their role flipped
     between control periods; the router re-reads eligibility on every
-    dispatch. One prefill chain is modeled per serving instance (the paper
-    deploys PD-disaggregated, prefill pool scaling with decode capacity).
+    dispatch. With a PrefillPool attached, prefill is a scheduled pooled
+    resource; without one, the PR 1 per-instance prefill chain is used.
     """
 
-    def __init__(self, cfg: RouterConfig, prefill_cm: CostModel):
+    def __init__(self, cfg: RouterConfig, prefill_cm: CostModel,
+                 prefill_pool: Optional[PrefillPool] = None,
+                 predictor: Optional[TwoStageLatencyPredictor] = None):
         assert cfg.policy in POLICIES, cfg.policy
         self.cfg = cfg
         self.prefill_cm = prefill_cm
+        self.pool = prefill_pool
+        self.predictor = predictor
         self.instances: Dict[int, DecodeInstanceSim] = {}
         self.retired: Dict[int, DecodeInstanceSim] = {}
-        self._prefill_free: Dict[int, float] = {}   # per-instance chain time
+        self._prefill_free: Dict[int, float] = {}   # legacy per-inst chain
         self.routed: List[RoutedRequest] = []
+        self._routed_ix: Dict[int, RoutedRequest] = {}
         self._assigned: Dict[int, int] = {}         # rid -> instance id
+        self._session_map: Dict[int, int] = {}      # session -> sticky inst
         self._rng = np.random.default_rng(cfg.seed)
         self._rr_cursor = 0
 
@@ -114,57 +170,173 @@ class ClusterRouter:
                 if i.serves_inference and i.role != "finetune"
                 and not i.draining]
 
-    # --------------------------------------------------------- dispatch --
-    def _pick_target(self, cand: List[DecodeInstanceSim]
-                     ) -> DecodeInstanceSim:
-        if self.cfg.policy == "round_robin":
+    # --------------------------------------------------------- policies --
+    def _least_loaded(self, cand: List[DecodeInstanceSim]
+                      ) -> DecodeInstanceSim:
+        # join-shortest-queue on the occupancy signal; ties broken by
+        # instance id for determinism
+        return min(cand, key=lambda i: (i.load(), i.inst_id))
+
+    def _predicted_tpot(self, inst: DecodeInstanceSim, req: Request
+                        ) -> float:
+        """Predicted decode-round latency (== TPOT) on `inst` with `req`
+        added, at the instance's current batch and finetune quantum."""
+        bs = min(inst.queue_depth + 1, inst.sim.max_slots)
+        if inst.active:
+            ctx = sum(r.context_len for r in inst.active) / len(inst.active)
+        else:
+            ctx = float(req.prompt_len)
+        q_ft = 0.0
+        if inst.role == "colocated" and inst.quantum_timeline:
+            q_ft = inst.quantum_timeline[-1][1] / max(inst.sim.k_max, 1)
+        return self.predictor.predict_colo(q_ft, bs, ctx)
+
+    def _predicted_delay(self, inst: DecodeInstanceSim, req: Request
+                         ) -> float:
+        """Routing score: predicted TPOT, plus the admission wait the
+        request would pay when the instance's queue spills past its slot
+        budget. Decode is memory-bound, so TPOT alone is nearly flat in
+        batch size — without the wait term a saturated instance looks as
+        cheap as an idle one and the policy piles onto it."""
+        tpot = self._predicted_tpot(inst, req)
+        slots = max(inst.sim.max_slots, 1)
+        excess = inst.queue_depth + 1 - slots
+        if excess <= 0:
+            return tpot
+        # each slot-budget overflow "wave" waits a full request residency
+        # (remaining tokens at this round's predicted TPOT)
+        rem = [r.max_new_tokens - r.generated for r in inst.active]
+        mean_rem = (sum(rem) / len(rem)) if rem else req.max_new_tokens
+        waves = math.ceil(excess / slots)
+        return tpot * (1.0 + waves * max(mean_rem, 1.0))
+
+    def _pick_target(self, cand: List[DecodeInstanceSim],
+                     req: Optional[Request] = None) -> DecodeInstanceSim:
+        policy = self.cfg.policy
+        if policy == "round_robin":
             pick = cand[self._rr_cursor % len(cand)]
             self._rr_cursor += 1
             return pick
-        if self.cfg.policy == "random":
+        if policy == "random":
             return cand[int(self._rng.integers(len(cand)))]
-        # least_loaded (join-shortest-queue on the occupancy signal);
-        # ties broken by instance id for determinism
-        return min(cand, key=lambda i: (i.load(), i.inst_id))
+        if policy == "predicted_latency" and self.predictor is not None \
+                and req is not None:
+            return min(cand,
+                       key=lambda i: (self._predicted_delay(i, req),
+                                      i.inst_id))
+        if policy == "session_affinity" and req is not None \
+                and req.session_id >= 0:
+            sticky = self._session_map.get(req.session_id)
+            if sticky is not None:
+                inst = self.instances.get(sticky)
+                if inst is not None and inst in cand and \
+                        inst.load() <= self.cfg.affinity_overflow_load:
+                    return inst
+            # first touch, sticky gone, or overflow: remap the session to
+            # the least-loaded instance (the prefix cache moves with it)
+            pick = self._least_loaded(cand)
+            self._session_map[req.session_id] = pick.inst_id
+            return pick
+        return self._least_loaded(cand)
 
+    # --------------------------------------------------------- dispatch --
     def dispatch(self, req: Request, now: float) -> int:
-        """Route one request. Returns the chosen instance id, or -1 when
-        admission rejects it (fleet saturated). Exactly-once by
-        construction: a request is enqueued on one instance or none."""
+        """Admit one request. Pool mode: returns PENDING (-2) and the
+        request enters the prefill queue, or REJECTED (-1) under global
+        saturation. Legacy chain mode: routes through this instance's
+        prefill chain immediately and returns the decode instance id.
+        Exactly-once by construction."""
         assert req.rid not in self._assigned, "request routed twice"
         # admission rejects only under GLOBAL saturation: an instance past
         # reject_load is skipped as long as any other can still absorb
         cand = [i for i in self.serving_instances()
                 if i.load() <= self.cfg.reject_load]
         if not cand:
-            self._assigned[req.rid] = -1
-            self.routed.append(RoutedRequest(req.rid, -1, req.arrival))
-            return -1
-        inst = self._pick_target(cand)
-        # prefill chain: request queues behind earlier prefills on the
-        # instance's prefill partner, then decode admission takes over
+            self._assigned[req.rid] = REJECTED
+            self._record(req, REJECTED)
+            return REJECTED
+        if self.pool is not None:
+            # prefill-tier backpressure: in pool mode decode load() only
+            # rises after prefill, so saturation must also be read off the
+            # pool queue — the same per-serving-instance bound reject_load
+            # puts on a decode queue, applied fleet-wide
+            limit = self.cfg.reject_load * cand[0].sim.max_slots \
+                * len(self.serving_instances())
+            if self.pool.queue_depth >= limit:
+                self._assigned[req.rid] = REJECTED
+                self._record(req, REJECTED)
+                return REJECTED
+            self.pool.submit(req, now)
+            self._assigned[req.rid] = PENDING
+            self._record(req, PENDING)
+            return PENDING
+        # legacy (PR 1) path: prefill serialized on the chosen instance's
+        # prefill partner, then decode admission takes over
+        inst = self._pick_target(cand, req)
         t_start = max(self._prefill_free[inst.inst_id], req.arrival, now)
         ready = t_start + self.prefill_cm.prefill_latency(req.prompt_len)
         self._prefill_free[inst.inst_id] = ready
         req.prefill_done = ready
         inst.enqueue(req, ready)
         self._assigned[req.rid] = inst.inst_id
-        self.routed.append(RoutedRequest(req.rid, inst.inst_id, req.arrival))
+        self._record(req, inst.inst_id)
+        return inst.inst_id
+
+    def _record(self, req: Request, instance: int) -> None:
+        rr = RoutedRequest(req.rid, instance, req.arrival)
+        self.routed.append(rr)
+        self._routed_ix[req.rid] = rr
+
+    def pump_prefill(self, until: float) -> int:
+        """Advance the prefill stage to ``until`` and hand every completed
+        prefill to a decode instance chosen by the routing policy (at
+        hand-off time, so the decision sees current fleet state). Returns
+        the number of requests handed to the decode stage."""
+        if self.pool is None:
+            return 0
+        handed = 0
+        for req, ready in self.pool.pump(until):
+            self._dispatch_decode(req, ready)
+            handed += 1
+        return handed
+
+    def _dispatch_decode(self, req: Request, ready: float) -> int:
+        """Decode-stage placement of a prefilled request. Placement always
+        succeeds (the request already paid its prefill): saturated
+        candidates are preferred in policy order, then any serving
+        instance, then any inference-capable one (draining included)."""
+        cand = [i for i in self.serving_instances()
+                if i.load() <= self.cfg.reject_load]
+        if not cand:
+            cand = self.serving_instances()
+        if not cand:
+            cand = [i for i in self.instances.values()
+                    if i.serves_inference and i.role != "finetune"]
+        assert cand, "no inference-capable instance left in the fleet"
+        inst = self._pick_target(cand, req)
+        inst.enqueue(req, ready)
+        self._assigned[req.rid] = inst.inst_id
+        self._routed_ix[req.rid].instance = inst.inst_id
         return inst.inst_id
 
     # ---------------------------------------------------------- metrics --
     def recent_violation_frac(self, window: int = 200) -> float:
         """Fraction of the fleet's last `window` decode-round TPOT samples
-        over the SLO — the autoscaler's QoS-headroom signal."""
-        samples: List[float] = []
+        over the SLO — the autoscaler's QoS-headroom signal. Samples are
+        merged fleet-wide by time and capped at `window` total (a
+        per-instance slice would over-sample big fleets)."""
+        samples: List[tuple] = []
         for inst in self.instances.values():
-            for _, _, lat, bs in inst.quantum_timeline[-window:]:
+            # per-instance tail is a superset of its share of the fleet tail
+            for t, _, lat, bs in inst.quantum_timeline[-window:]:
                 if bs > 0:
-                    samples.append(lat)
+                    samples.append((t, lat))
         if not samples:
             return 0.0
+        samples.sort()
+        recent = samples[-window:]
         lim = self.cfg.tpot_slo_s * self.cfg.tpot_slack
-        return sum(1 for s in samples if s > lim) / len(samples)
+        return sum(1 for _, lat in recent if lat > lim) / len(recent)
 
     def stats(self, duration: float) -> ClusterStats:
         """Cluster goodput accounting over every request the router saw."""
@@ -174,12 +346,15 @@ class ClusterRouter:
                                       for i in self.all_instances()))
         ttfts: List[float] = []
         tpots: List[float] = []
+        stage_q: List[float] = []
+        stage_p: List[float] = []
+        stage_d: List[float] = []
         reqs: Dict[int, Request] = {}
         for inst in self.all_instances():
             for r in inst.all_reqs:
                 reqs[r.rid] = r
         for rr in self.routed:
-            if rr.instance < 0:
+            if rr.instance == REJECTED:
                 st.rejected += 1
                 continue
             st.routed += 1
@@ -187,14 +362,13 @@ class ClusterRouter:
             if r is None or r.finish < 0 or not r.token_times:
                 continue
             st.completed += 1
-            ttft = r.token_times[0] - r.arrival
-            samples = r.tpot_samples()
-            tpot_p = float(np.percentile(samples, cfg.tpot_quantile * 100)) \
-                if samples else 0.0
+            ttft_ok, tpot_ok, ttft, tpot_p = request_slo(r, cfg)
             ttfts.append(ttft)
             tpots.append(tpot_p)
-            ttft_ok = ttft <= cfg.ttft_slo_s
-            tpot_ok = tpot_p <= cfg.tpot_slo_s * cfg.tpot_slack
+            if r.prefill_start >= 0:           # went through the pool
+                stage_q.append(r.prefill_start - r.arrival)
+                stage_p.append(r.prefill_done - r.prefill_start)
+                stage_d.append(r.token_times[0] - r.prefill_done)
             st.ttft_attainment += ttft_ok
             st.tpot_attainment += tpot_ok
             if ttft_ok and tpot_ok:
@@ -211,11 +385,16 @@ class ClusterRouter:
             st.ttft_p99 = float(np.percentile(ttfts, 99))
         if tpots:
             st.tpot_p99 = float(np.percentile(tpots, 99))
+        if stage_q:
+            st.ttft_queue_p99 = float(np.percentile(stage_q, 99))
+            st.ttft_prefill_p99 = float(np.percentile(stage_p, 99))
+            st.ttft_decode_wait_p99 = float(np.percentile(stage_d, 99))
         return st
 
     def check_conservation(self) -> None:
-        """Every offered request routed exactly once or rejected; every
-        enqueued request traces back to exactly one dispatch."""
+        """Every offered request rejected, still in the prefill stage, or
+        enqueued on exactly one decode instance; every enqueued request
+        traces back to exactly one dispatch."""
         seen = [rr.rid for rr in self.routed]
         assert len(seen) == len(set(seen)), "request dispatched twice"
         enq: Dict[int, int] = {}
@@ -223,9 +402,19 @@ class ClusterRouter:
             for r in inst.all_reqs:
                 assert r.rid not in enq, "request on two instances"
                 enq[r.rid] = inst.inst_id
+        pending = 0
         for rr in self.routed:
-            if rr.instance < 0:
+            if rr.instance == REJECTED:
                 assert rr.rid not in enq, "rejected request was enqueued"
+            elif rr.instance == PENDING:
+                assert rr.rid not in enq, "pending request was enqueued"
+                pending += 1
             else:
                 assert enq.get(rr.rid) == rr.instance, "assignment mismatch"
         assert len(enq) == sum(1 for rr in self.routed if rr.instance >= 0)
+        if self.pool is not None:
+            assert pending == self.pool.queue_depth, \
+                "prefill-stage count disagrees with the pool queue"
+            self.pool.check_conservation()
+        else:
+            assert pending == 0

@@ -20,10 +20,15 @@ class Request:
     arrival: float                 # seconds since trace start
     prompt_len: int
     max_new_tokens: int
+    # sticky-routing key (-1 = sessionless): requests sharing a session
+    # benefit from prefix-cache reuse when routed to the same instance
+    session_id: int = -1
     phase: Phase = Phase.QUEUED
     slot: int = -1                 # decode slot index (-1 = unassigned)
     generated: int = 0
+    prefill_start: float = -1.0    # time a prefill worker picked it up
     prefill_done: float = -1.0     # time prefill finished (TTFT component)
+    prefill_worker: int = -1       # pool worker that ran the prefill
     finish: float = -1.0
     token_times: List[float] = dataclasses.field(default_factory=list)
 

@@ -36,6 +36,11 @@ class TraceConfig:
     spike_mult: float = 1.0
     spike_start_frac: float = 0.4    # window position, fraction of duration
     spike_dur_frac: float = 0.15
+    # sticky sessions (session_affinity routing): 0 = sessionless trace.
+    # Session ids are drawn Zipf-like from a separate RNG stream so enabling
+    # them never perturbs the arrival/length draws of an existing seed.
+    n_sessions: int = 0
+    session_zipf_a: float = 1.2      # few hot sessions, long cold tail
     seed: int = 0
 
 
@@ -63,6 +68,11 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
         reqs.append(Request(rid=rid, arrival=t, prompt_len=max(p, 1),
                             max_new_tokens=max(o, 1)))
         rid += 1
+    if cfg.n_sessions > 0:
+        srng = np.random.default_rng(cfg.seed + 104729)
+        for r in reqs:
+            r.session_id = int(srng.zipf(cfg.session_zipf_a)
+                               % cfg.n_sessions)
     return reqs
 
 
@@ -75,8 +85,10 @@ SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail")
 
 
 def scenario_config(name: str, duration_s: float = 600.0,
-                    mean_rps: float = 5.3, seed: int = 0) -> TraceConfig:
-    base = dict(duration_s=duration_s, mean_rps=mean_rps, seed=seed)
+                    mean_rps: float = 5.3, seed: int = 0,
+                    n_sessions: int = 0) -> TraceConfig:
+    base = dict(duration_s=duration_s, mean_rps=mean_rps, seed=seed,
+                n_sessions=n_sessions)
     if name == "steady":
         # near-Poisson arrivals, flat envelope: the autoscaler baseline
         return TraceConfig(burstiness=1.0, rate_amplitude=0.05, **base)
@@ -97,8 +109,10 @@ def scenario_config(name: str, duration_s: float = 600.0,
 
 
 def generate_scenario(name: str, duration_s: float = 600.0,
-                      mean_rps: float = 5.3, seed: int = 0) -> List[Request]:
-    return generate(scenario_config(name, duration_s, mean_rps, seed))
+                      mean_rps: float = 5.3, seed: int = 0,
+                      n_sessions: int = 0) -> List[Request]:
+    return generate(scenario_config(name, duration_s, mean_rps, seed,
+                                    n_sessions=n_sessions))
 
 
 def peak_rps(reqs: List[Request], window_s: float = 10.0) -> float:

@@ -1,6 +1,9 @@
-"""Cluster layer: router conservation, goodput accounting, autoscaler
-floor/role invariants, and the stepped-instance refactor's equivalence
-with the monolithic run loop."""
+"""Cluster layer: two-tier routing plane (admission -> prefill pool ->
+decode fleet), router conservation, goodput accounting, autoscaler
+floor/role invariants for both control loops, and the stepped-instance
+refactor's equivalence with the monolithic run loop."""
+
+import dataclasses
 
 import pytest
 
@@ -9,6 +12,7 @@ from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot)
 from repro.core.cluster import ClusterConfig, ClusterSim, simulate_cluster
 from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.prefill_pool import PrefillPoolConfig, PrefillPoolSnapshot
 from repro.core.router import ClusterRouter, RouterConfig
 from repro.core.simulator import DecodeInstanceSim, SimConfig
 from repro.serving.request import Request
@@ -23,12 +27,15 @@ LLAMA = get_config("llama3-8b")
 
 
 def _cluster_run(mode="harli", scenario="steady", duration=25.0, rps=8.0,
-                 n=2, autoscale=True, policy="least_loaded", seed=2):
-    reqs = generate_scenario(scenario, duration, rps, seed=seed - 1)
+                 n=2, autoscale=True, policy="least_loaded", seed=2,
+                 prefill="default", sessions=0):
+    reqs = generate_scenario(scenario, duration, rps, seed=seed - 1,
+                             n_sessions=sessions)
+    kw = {} if prefill == "default" else {"prefill": prefill}
     return simulate_cluster(
         LLAMA, LLAMA, reqs, SimConfig(mode=mode, seed=seed),
         ClusterConfig(n_initial=n, autoscale=autoscale,
-                      router=RouterConfig(policy=policy)))
+                      router=RouterConfig(policy=policy), **kw))
 
 
 @pytest.fixture(scope="module")
@@ -42,11 +49,13 @@ def separate_res():
 
 
 # -------------------------------------------------------------- router ---
-@pytest.mark.parametrize("policy", ["least_loaded", "round_robin", "random"])
+@pytest.mark.parametrize("policy", ["least_loaded", "round_robin", "random",
+                                    "predicted_latency", "session_affinity"])
 def test_router_conservation(policy):
     """Every request is routed exactly once or rejected — checked by the
-    router's own audit plus external accounting."""
-    res = _cluster_run(policy=policy, duration=15.0)
+    router's own audit plus external accounting — under every policy and
+    the prefill-pool stage."""
+    res = _cluster_run(policy=policy, duration=15.0, sessions=8)
     s = res.stats
     assert s.routed + s.rejected == s.offered
     assert s.completed <= s.routed
@@ -248,6 +257,176 @@ def test_oversized_request_never_wedges_the_event_loop():
     assert inst.t >= 10.0, "event loop wedged behind oversized request"
     assert ok.finish > 0, "queued request behind the oversized one starved"
     assert inst.dropped == 1, "drop not recorded for diagnosis"
+
+
+# -------------------------------------------------- two-tier plane (PR 3) --
+def test_pool_beats_chain_baseline_on_spike():
+    """Acceptance: on the spike scenario with fixed seeds, the
+    disaggregated prefill pool + predicted_latency routing achieves TTFT
+    p99 and cluster goodput at least as good as PR 1's per-instance
+    prefill chain + least_loaded."""
+    old = _cluster_run("harli", scenario="spike", duration=40.0, rps=10.0,
+                       policy="least_loaded", prefill=None, seed=2)
+    new = _cluster_run("harli", scenario="spike", duration=40.0, rps=10.0,
+                       policy="predicted_latency",
+                       prefill=PrefillPoolConfig(), seed=2)
+    assert new.stats.ttft_p99 <= old.stats.ttft_p99, \
+        (new.stats.ttft_p99, old.stats.ttft_p99)
+    assert new.stats.goodput >= old.stats.goodput, \
+        (new.stats.goodput, old.stats.goodput)
+
+
+@pytest.mark.parametrize("policy", ["predicted_latency", "session_affinity"])
+def test_new_policies_deterministic(policy):
+    a = _cluster_run(policy=policy, duration=15.0, sessions=8)
+    b = _cluster_run(policy=policy, duration=15.0, sessions=8)
+    assert a.stats == b.stats
+    assert a.prefill_timeline == b.prefill_timeline
+    assert [(d.t, d.action, d.target) for d in a.decisions] == \
+        [(d.t, d.action, d.target) for d in b.decisions]
+
+
+def test_session_affinity_sticks_until_overflow():
+    sim = SimConfig(mode="harli", seed=0)
+    cm = CostModel(LLAMA, InstanceSpec(tp=sim.tp), seed=7)
+    router = ClusterRouter(
+        RouterConfig(policy="session_affinity",
+                     affinity_overflow_load=0.1), cm)
+    a = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    b = DecodeInstanceSim(1, LLAMA, None, sim, None, 1)
+    router.add_instance(a)
+    router.add_instance(b)
+    targets = []
+    for rid in range(20):
+        targets.append(router.dispatch(
+            Request(rid=rid, arrival=0.0, prompt_len=64, max_new_tokens=8,
+                    session_id=5), now=0.0))
+    # sticky while under the overflow load, then remaps to the other
+    assert targets[0] == targets[1] == targets[2]
+    assert len(set(targets)) == 2, "session never overflowed"
+    router.check_conservation()
+
+
+def test_predicted_latency_falls_back_without_predictor():
+    """separate mode fits no predictor; the policy must degrade to
+    least_loaded rather than crash or mis-route."""
+    res = _cluster_run("separate", policy="predicted_latency",
+                       duration=12.0)
+    assert res.stats.completed > 0
+
+
+def test_ttft_stage_accounting():
+    """Pool mode must expose per-stage TTFT percentiles, and the stages
+    (queue wait + prefill compute + decode-admission wait) must sum to
+    TTFT exactly per request — the accounting identity, not a quantile
+    relation (percentiles are not subadditive)."""
+    duration = 20.0
+    reqs = generate_scenario("spike", duration, 10.0, seed=1)
+    cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=2),
+                    ClusterConfig(n_initial=2))
+    res = cs.run(reqs, duration)
+    s = res.stats
+    assert s.completed > 0
+    assert s.ttft_prefill_p99 > 0
+    checked = 0
+    for inst in cs.router.all_instances():
+        for r in inst.all_reqs:
+            if r.finish < 0 or not r.token_times:
+                continue
+            stages = (r.prefill_start - r.arrival) \
+                + (r.prefill_done - r.prefill_start) \
+                + (r.token_times[0] - r.prefill_done)
+            assert stages == pytest.approx(r.token_times[0] - r.arrival)
+            checked += 1
+    assert checked > 0
+
+
+def test_two_loop_autoscaler_holds_both_floors():
+    res = _cluster_run("harli", scenario="diurnal", duration=40.0, rps=3.0)
+    assert res.fleet_timeline and res.prefill_timeline
+    assert min(n for _, n, _ in res.fleet_timeline) >= 1
+    assert min(n for _, n, _ in res.prefill_timeline) >= 1
+    assert res.final_prefill >= 1
+
+
+def test_pool_mode_keeps_admission_backpressure():
+    """In pool mode decode load only rises after prefill, so admission
+    must also read saturation off the prefill queue: a frozen fleet under
+    a heavy burst rejects rather than queueing without bound."""
+    reqs = generate(TraceConfig(duration_s=10.0, mean_rps=120.0, seed=3))
+    res = simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=4),
+        ClusterConfig(n_initial=1, autoscale=False,
+                      router=RouterConfig(reject_load=0.5)))
+    s = res.stats
+    assert s.rejected > 0
+    assert s.routed + s.rejected == s.offered
+
+
+def test_prefill_pool_scales_with_spike():
+    res = _cluster_run("harli", scenario="spike", duration=40.0, rps=12.0)
+    assert any(d.action == "add_prefill" for d in res.decisions), \
+        [d.action for d in res.decisions if d.action != "none"]
+    assert res.peak_prefill > 2
+
+
+def test_prefill_floor_tracks_decode_fleet():
+    a = Autoscaler(AutoscalerConfig(min_prefill=1, prefill_per_decode=1.0))
+    assert a.prefill_floor(n_serving=3) == 3
+    assert a.prefill_floor(n_serving=0) == 1          # hard floor
+    a = Autoscaler(AutoscalerConfig(min_prefill=2, prefill_per_decode=0.5,
+                                    max_prefill=4))
+    assert a.prefill_floor(n_serving=3) == 2
+    assert a.prefill_floor(n_serving=100) == 4        # capped
+
+
+def test_evaluate_prefill_never_drops_below_floor():
+    a = Autoscaler(AutoscalerConfig(min_prefill=2, prefill_cooldown_ticks=0))
+    idle = PrefillPoolSnapshot(n_workers=2, n_draining=0, queue_depth=0,
+                               backlog_s=0.0, wait_p99=0.0)
+    for t in range(20):
+        d = a.evaluate_prefill(float(t), idle, n_serving=1)
+        assert d.action != "remove_prefill"
+    shrinkable = dataclasses.replace(idle, n_workers=5)
+    assert a.evaluate_prefill(99.0, shrinkable,
+                              n_serving=1).action == "remove_prefill"
+
+
+def test_recent_violation_frac_is_fleet_wide_by_time():
+    """The QoS signal must merge samples across the fleet by time and cap
+    at `window` total — a per-instance slice over-samples big fleets."""
+    sim = SimConfig(mode="harli", seed=0)
+    cm = CostModel(LLAMA, InstanceSpec(tp=sim.tp), seed=7)
+    router = ClusterRouter(RouterConfig(tpot_slo_s=0.040), cm)
+    hot = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    cold = DecodeInstanceSim(1, LLAMA, None, sim, None, 1)
+    router.add_instance(hot)
+    router.add_instance(cold)
+    # old samples violate, recent ones don't: the fleet's last 200 by time
+    # are 150 clean + 50 violating -> 0.25 (per-instance slicing gives 0.5)
+    hot.quantum_timeline = [(float(t), 0, 1.0, 4) for t in range(150)]
+    cold.quantum_timeline = [(150.0 + t, 0, 0.001, 4) for t in range(150)]
+    assert router.recent_violation_frac(window=200) == pytest.approx(0.25)
+
+
+def test_router_seed_derives_from_sim_seed():
+    """`random` policy must differ across SimConfig seeds (the default
+    RouterConfig.seed=0 used to pin it), while an explicit seed wins."""
+    def routed_seq(sim_seed, router_seed=0):
+        reqs = generate_scenario("steady", 10.0, 8.0, seed=1)
+        cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=sim_seed),
+                        ClusterConfig(n_initial=3, autoscale=False,
+                                      router=RouterConfig(
+                                          policy="random",
+                                          seed=router_seed)))
+        cs.run(reqs, 10.0)
+        return [rr.instance for rr in cs.router.routed], cs.router.cfg.seed
+    seq_a, seed_a = routed_seq(sim_seed=2)
+    seq_b, seed_b = routed_seq(sim_seed=3)
+    assert seed_a != seed_b
+    assert seq_a != seq_b, "random policy ignored SimConfig.seed"
+    _, explicit = routed_seq(sim_seed=2, router_seed=123)
+    assert explicit == 123
 
 
 # ------------------------------------------------- stepped == monolithic --

@@ -1,0 +1,157 @@
+"""Disaggregated prefill pool: conservation, per-worker monotonicity,
+EDF-vs-FIFO ordering behaviour, token-budget batching, worker lifecycle,
+and determinism."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.prefill_pool import PrefillPool, PrefillPoolConfig
+from repro.serving.request import Request
+from repro.serving.trace import generate_scenario
+
+LLAMA = get_config("llama3-8b")
+TTFT_SLO = 4.0
+
+
+def _pool(n_workers=2, ordering="edf", **kw):
+    return PrefillPool(
+        PrefillPoolConfig(n_workers=n_workers, ordering=ordering, **kw),
+        CostModel(LLAMA, InstanceSpec(tp=2), seed=7),
+        ttft_slo_s=TTFT_SLO)
+
+
+def _drain(pool, reqs):
+    for r in reqs:
+        pool.submit(r, r.arrival)
+    done = pool.pump(1e9)
+    pool.check_conservation()
+    return done
+
+
+def _spike(duration=30.0, rps=12.0, seed=1):
+    return generate_scenario("spike", duration, rps, seed=seed)
+
+
+# --------------------------------------------------------- conservation ---
+@pytest.mark.parametrize("ordering", ["edf", "fifo"])
+def test_every_request_prefilled_exactly_once(ordering):
+    reqs = _spike()
+    done = _drain(_pool(ordering=ordering), reqs)
+    assert len(done) == len(reqs)
+    assert sorted(r.rid for r, _ in done) == sorted(r.rid for r in reqs)
+    for r, t in done:
+        assert r.prefill_done == t
+        assert r.prefill_start >= r.arrival
+        assert r.prefill_done > r.prefill_start
+        assert r.prefill_worker >= 0
+
+
+def test_prefill_done_monotone_per_worker():
+    reqs = _spike()
+    done = _drain(_pool(n_workers=3), reqs)
+    by_worker = {}
+    for r, _ in done:
+        by_worker.setdefault(r.prefill_worker, []).append(r)
+    assert len(by_worker) == 3, "a worker sat idle through a spike"
+    for rs in by_worker.values():
+        rs.sort(key=lambda r: r.prefill_start)
+        for a, b in zip(rs, rs[1:]):
+            assert b.prefill_done >= a.prefill_done
+            if b.prefill_start > a.prefill_start:   # distinct batches
+                assert b.prefill_start >= a.prefill_done - 1e-12
+            else:                                    # same fused batch
+                assert b.prefill_done == a.prefill_done
+
+
+# ------------------------------------------------------------- ordering ---
+def test_edf_beats_fifo_on_ttft_attainment_under_overload():
+    """Deadline-aware ordering with doomed-request demotion must convert
+    the same prefill capacity into strictly more TTFT-SLO-attaining
+    requests than FIFO when the spike overloads the pool."""
+    attain = {}
+    for ordering in ("edf", "fifo"):
+        done = _drain(_pool(n_workers=2, ordering=ordering),
+                      _spike(rps=12.0, seed=3))
+        waits = np.array([t - r.arrival for r, t in done])
+        attain[ordering] = float(np.mean(waits <= TTFT_SLO))
+    assert attain["edf"] > attain["fifo"] + 0.05, attain
+
+
+def test_edf_ttft_p99_no_worse_when_feasible():
+    """In the feasible regime (transient backlog only) the deadline-aware
+    order must not regress the raw tail. FCFS provably minimizes max flow
+    time, so under deep overload EDF trades raw p99 for attainment — this
+    pins the feasible operating point where both hold."""
+    p99 = {}
+    for ordering in ("edf", "fifo"):
+        done = _drain(_pool(n_workers=3, ordering=ordering),
+                      _spike(rps=10.0, seed=1))
+        waits = np.array([t - r.arrival for r, t in done])
+        assert np.mean(waits <= TTFT_SLO) == 1.0
+        p99[ordering] = float(np.percentile(waits, 99))
+    assert p99["edf"] <= p99["fifo"], p99
+
+
+# ------------------------------------------------------------- batching ---
+def test_short_prompts_fuse_long_prompts_run_alone():
+    pool = _pool(n_workers=1, max_batch=4, max_batch_tokens=512)
+    shorts = [Request(rid=i, arrival=0.0, prompt_len=100, max_new_tokens=8)
+              for i in range(8)]
+    _drain(pool, shorts)
+    w = pool.all_workers()[0]
+    assert w.n_prefilled == 8
+    assert w.n_batches < 8, "short prompts never fused"
+
+    pool = _pool(n_workers=1, max_batch=4, max_batch_tokens=512)
+    longs = [Request(rid=i, arrival=0.0, prompt_len=2048, max_new_tokens=8)
+             for i in range(4)]
+    _drain(pool, longs)
+    w = pool.all_workers()[0]
+    assert w.n_batches == 4, "long prompts were fused past the token budget"
+
+
+def test_batched_prefill_amortizes_weight_stream():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=0)
+    fused = cm.prefill_batch_latency([128, 128, 128, 128])
+    solo = cm.prefill_latency(128)
+    assert fused < 4 * solo
+    # single-prompt batch reduces exactly to the bs=1 path
+    assert cm.prefill_batch_latency([512]) == pytest.approx(
+        cm.prefill_latency(512))
+
+
+# ------------------------------------------------------------ lifecycle ---
+def test_drain_and_retire_workers():
+    pool = _pool(n_workers=3)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=512, max_new_tokens=8)
+            for i in range(6)]
+    for r in reqs:
+        pool.submit(r, 0.0)
+    pool.pump(0.5)
+    wid = pool.drain_worker(min_workers=1)
+    assert wid >= 0
+    assert len(pool.active_workers()) == 2
+    # drained worker takes no new batches but its history stays accounted
+    before = pool.workers[wid].n_prefilled
+    pool.pump(1e9)
+    assert pool.workers[wid].n_prefilled == before
+    pool.retire_drained(now=1e9)
+    assert wid in pool.retired
+    pool.check_conservation()
+
+
+def test_drain_refuses_below_floor():
+    pool = _pool(n_workers=2)
+    assert pool.drain_worker(min_workers=2) == -1
+    assert pool.drain_worker(min_workers=1) >= 0
+    assert pool.drain_worker(min_workers=1) == -1
+
+
+# ---------------------------------------------------------- determinism ---
+def test_pool_deterministic_for_fixed_seed():
+    a = _drain(_pool(), _spike(seed=5))
+    b = _drain(_pool(), _spike(seed=5))
+    assert [(r.rid, r.prefill_worker, t) for r, t in a] == \
+        [(r.rid, r.prefill_worker, t) for r, t in b]
