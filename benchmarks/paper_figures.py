@@ -413,9 +413,119 @@ def cluster_fleet_timeline(duration_s: float = 90.0):
     _row("cluster_fleet_timeline.png", 0, path)
 
 
+# Beyond-paper: the three prefill deployment modes (chained / pooled /
+# chunked, docs/cluster.md) head-to-head on the spike scenario — where
+# does prefill work belong when decode instances are deliberately kept
+# busy with PEFT finetuning? CSV rows report goodput, TTFT/TPOT p99 and
+# total hardware; the PNG bars make the tradeoff visible. The chunked
+# column must hold the TPOT SLO (the QoS price check) while using no
+# prefill tier at all.
+def cluster_prefill_modes(duration_s: float = 90.0):
+    import os
+
+    from repro.core.cluster import ClusterConfig, simulate_cluster
+    from repro.core.prefill_pool import PrefillPoolConfig
+    from repro.core.router import RouterConfig
+    from repro.serving.trace import generate_scenario
+
+    rcfg = RouterConfig()
+    tpot_limit_ms = rcfg.tpot_slo_s * rcfg.tpot_slack * 1e3
+    modes = {
+        "chained": dict(prefill_mode="chained", prefill=None),
+        "pooled": dict(prefill_mode="pooled",
+                       prefill=PrefillPoolConfig()),
+        "chunked": dict(prefill_mode="chunked"),
+    }
+    # prefill-side hardware peak per mode: pool workers (pooled), one
+    # implicit serialized-prefill partner per peak instance (chained),
+    # none (chunked — prefill rides the decode fleet). One definition for
+    # both the CSV rows and the PNG panel.
+    def prefill_peak(name, res):
+        return {"pooled": res.peak_prefill, "chained": res.peak_fleet,
+                "chunked": 0}[name]
+
+    out = {}
+    for name, kw in modes.items():
+        reqs = generate_scenario("spike", duration_s, mean_rps=10.0,
+                                 seed=41)
+        res = simulate_cluster(LLAMA, LLAMA, reqs,
+                               SimConfig(mode="harli", seed=42),
+                               ClusterConfig(n_initial=2, router=rcfg,
+                                             **kw))
+        out[name] = res
+        s = res.stats
+        pf = prefill_peak(name, res)
+        _row(f"cluster_prefill_modes,{name}", 0,
+             f"goodput={s.goodput:.2f}|thr={s.throughput:.2f}"
+             f"|attain={s.slo_attainment:.3f}"
+             f"|ttft_p99={s.ttft_p99:.2f}"
+             f"|tpot_p99_ms={s.tpot_p99*1e3:.1f}"
+             f"|tpot_slo_ok={int(s.tpot_p99*1e3 <= tpot_limit_ms)}"
+             f"|ft={res.ft_throughput:.2f}"
+             f"|decode_peak={res.peak_fleet}|prefill_peak={pf}"
+             f"|hw_peak={res.peak_fleet + pf}")
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        _row("cluster_prefill_modes.png", 0, "skipped_no_matplotlib")
+        return
+
+    # same visual system as cluster_fleet_timeline: categorical slots for
+    # the modes, light surface, recessive grid
+    C = {"chained": "#2a78d6", "pooled": "#eb6834", "chunked": "#1baf7a",
+         "ink": "#0b0b0b", "ink2": "#52514e", "grid": "#e4e3df",
+         "surface": "#fcfcfb", "slo": "#b3261e"}
+    panels = [
+        ("goodput (req/s)", lambda n: out[n].stats.goodput, None),
+        ("TTFT p99 (s)", lambda n: out[n].stats.ttft_p99, rcfg.ttft_slo_s),
+        ("TPOT p99 (ms)", lambda n: out[n].stats.tpot_p99 * 1e3,
+         tpot_limit_ms),
+        ("peak hardware (instances)",
+         lambda n: out[n].peak_fleet + prefill_peak(n, out[n]), None),
+    ]
+    fig, axes = plt.subplots(1, 4, figsize=(10.8, 3.1),
+                             facecolor=C["surface"])
+    names = list(modes)
+    for ax, (title, get, slo) in zip(axes, panels):
+        vals = [get(n) for n in names]
+        ax.bar(range(len(names)), vals, 0.62,
+               color=[C[n] for n in names])
+        for i, v in enumerate(vals):
+            ax.annotate(f"{v:.1f}", (i, v), xytext=(0, 3),
+                        textcoords="offset points", ha="center",
+                        fontsize=8, color=C["ink2"])
+        if slo is not None:
+            ax.axhline(slo, color=C["slo"], lw=1.1, ls="--")
+            ax.annotate("SLO", (len(names) - 0.5, slo), xytext=(2, 2),
+                        textcoords="offset points", fontsize=7.5,
+                        color=C["slo"])
+        ax.set_title(title, fontsize=9.5, color=C["ink"])
+        ax.set_xticks(range(len(names)))
+        ax.set_xticklabels(names, fontsize=8.5)
+        ax.set_facecolor(C["surface"])
+        ax.grid(axis="y", color=C["grid"], lw=0.6)
+        ax.set_axisbelow(True)
+        ax.tick_params(labelsize=8, colors=C["ink2"])
+        for sp in ax.spines.values():
+            sp.set_color(C["grid"])
+    fig.suptitle("Prefill deployment modes under a flash crowd "
+                 "(spike scenario, harli fleet)", fontsize=10.5,
+                 color=C["ink"])
+    fig.tight_layout()
+    out_dir = os.path.join(os.path.dirname(__file__), "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "cluster_prefill_modes.png")
+    fig.savefig(path, dpi=150, facecolor=C["surface"])
+    plt.close(fig)
+    _row("cluster_prefill_modes.png", 0, path)
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
-       cluster_goodput, cluster_fleet_timeline]
+       cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes]

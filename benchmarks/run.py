@@ -29,19 +29,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     t_all = time.time()
     failed = []
+    quick_durations = {"fig11_throughput_qos": 45.0,
+                       "sec87_tp_mode": 45.0,
+                       "cluster_goodput": 40.0,
+                       "cluster_fleet_timeline": 40.0,
+                       "cluster_prefill_modes": 40.0}
     for fn in F.ALL:
         if args.only and args.only not in fn.__name__:
             continue
         t0 = time.time()
         try:
-            if args.quick and fn.__name__ == "fig11_throughput_qos":
-                fn(duration_s=45.0)
-            elif args.quick and fn.__name__ == "sec87_tp_mode":
-                fn(duration_s=45.0)
-            elif args.quick and fn.__name__ == "cluster_goodput":
-                fn(duration_s=40.0)
-            elif args.quick and fn.__name__ == "cluster_fleet_timeline":
-                fn(duration_s=40.0)
+            if args.quick and fn.__name__ in quick_durations:
+                fn(duration_s=quick_durations[fn.__name__])
             else:
                 fn()
             print(f"# {fn.__name__}: {time.time()-t0:.1f}s")

@@ -1,17 +1,25 @@
 """Cluster-scale experiment in one command: route a multi-tenant trace
-through the two-tier plane (admission -> disaggregated prefill pool ->
-decode fleet) with the global router + two-loop autoscaler and compare
-harli co-location against a separate-fleet deployment on cluster goodput
-(DistServe's SLO-attaining throughput), QoS attainment and finetune
-throughput.
+through the routing plane and compare harli co-location against a
+separate-fleet deployment on cluster goodput (DistServe's SLO-attaining
+throughput), QoS attainment and finetune throughput.
 
     PYTHONPATH=src python examples/cluster_sim.py \
         [--scenario spike] [--duration 60] [--rps 10] [--instances 2] \
-        [--policy predicted_latency] [--prefill-workers 2] \
-        [--sessions 32] [--no-autoscale]
+        [--policy predicted_latency] [--prefill-mode pooled] \
+        [--prefill-workers 2] [--chunk-budget 256] [--sessions 32] \
+        [--prefix-cache-chunks 16] [--no-autoscale]
 
-``--prefill-workers 0`` falls back to PR 1's per-instance serialized
-prefill chain — the baseline the disaggregated pool is measured against.
+Three deployment modes (docs/cluster.md):
+  * ``--prefill-mode chained``  — PR 1's per-instance serialized prefill
+  * ``--prefill-mode pooled``   — disaggregated prefill pool (default)
+  * ``--prefill-mode chunked``  — prefill chunks mixed into decode rounds
+    under a QoS-priced per-round token budget (no prefill tier at all)
+
+``--prefill-workers 0`` still selects chained mode for backward
+compatibility. With ``--sessions > 0`` every serving instance gets a
+session prefix cache, so sticky routing (``--policy session_affinity``)
+shortens effective prefill on hits; ``--prefix-cache-chunks 0`` disables
+it (the PR 3 cache-less baseline).
 """
 
 import argparse
@@ -20,8 +28,9 @@ from repro.configs import get_config
 from repro.core.autoscaler import AutoscalerConfig
 from repro.core.cluster import ClusterConfig, simulate_cluster
 from repro.core.prefill_pool import PrefillPoolConfig
-from repro.core.router import POLICIES, RouterConfig
-from repro.core.simulator import SimConfig
+from repro.core.prefix_cache import PrefixCacheConfig
+from repro.core.router import PREFILL_MODES, POLICIES, RouterConfig
+from repro.core.simulator import ChunkedPrefillConfig, SimConfig
 from repro.serving.trace import SCENARIOS, generate_scenario, peak_rps
 
 
@@ -32,13 +41,22 @@ def main():
     ap.add_argument("--rps", type=float, default=10.0)
     ap.add_argument("--instances", type=int, default=2)
     ap.add_argument("--policy", default="least_loaded", choices=POLICIES)
+    ap.add_argument("--prefill-mode", default=None, choices=PREFILL_MODES,
+                    help="deployment mode; default derives from "
+                         "--prefill-workers (0 = chained, else pooled)")
     ap.add_argument("--prefill-workers", type=int, default=2,
-                    help="initial prefill-pool size; 0 = legacy "
-                         "per-instance prefill chain")
+                    help="initial prefill-pool size (pooled mode); 0 = "
+                         "chained mode")
     ap.add_argument("--prefill-ordering", default="edf",
                     choices=("edf", "fifo"))
+    ap.add_argument("--chunk-budget", type=int, default=256,
+                    help="initial per-round prefill token budget "
+                         "(chunked mode)")
     ap.add_argument("--sessions", type=int, default=0,
                     help="sticky sessions in the trace (session_affinity)")
+    ap.add_argument("--prefix-cache-chunks", type=int, default=16,
+                    help="per-instance session prefix cache capacity in "
+                         "allocator chunks; 0 disables the cache")
     ap.add_argument("--inf", default="llama3-8b")
     ap.add_argument("--ft", default="llama3-8b")
     ap.add_argument("--qos-ms", type=float, default=40.0)
@@ -51,52 +69,76 @@ def main():
     n_sessions = args.sessions
     if args.policy == "session_affinity" and n_sessions == 0:
         n_sessions = 32          # affinity needs sessions to stick to
+    mode = args.prefill_mode
+    if mode is None:
+        mode = "chained" if args.prefill_workers <= 0 else "pooled"
+    elif mode == "pooled" and args.prefill_workers <= 0:
+        ap.error("--prefill-mode pooled needs --prefill-workers >= 1 "
+                 "(0 selects chained mode)")
+    prefill = PrefillPoolConfig(
+        n_workers=args.prefill_workers,
+        ordering=args.prefill_ordering) if mode == "pooled" else None
+    cache = PrefixCacheConfig(chunks=args.prefix_cache_chunks) \
+        if n_sessions > 0 and args.prefix_cache_chunks > 0 else None
+    tier = {"pooled": f"pool({args.prefill_workers},"
+                      f"{args.prefill_ordering})",
+            "chained": "per-instance chain",
+            "chunked": f"chunked(budget={args.chunk_budget})"}[mode]
     probe = generate_scenario(args.scenario, args.duration, args.rps,
                               seed=args.seed + 1, n_sessions=n_sessions)
-    prefill = None if args.prefill_workers <= 0 else PrefillPoolConfig(
-        n_workers=args.prefill_workers, ordering=args.prefill_ordering)
-    tier = (f"pool({args.prefill_workers},{args.prefill_ordering})"
-            if prefill else "per-instance chain")
     print(f"scenario={args.scenario}: {len(probe)} requests over "
           f"{args.duration:.0f}s (mean {len(probe)/args.duration:.1f} rps, "
           f"peak {peak_rps(probe):.1f} rps)  fleet_0={args.instances}  "
           f"policy={args.policy}  prefill={tier}  "
+          f"prefix_cache={'on' if cache else 'off'}  "
           f"autoscale={not args.no_autoscale}")
     print(f"SLOs: TTFT<={args.ttft_slo:.1f}s TPOT<={args.qos_ms:.0f}ms\n")
 
     out = {}
-    for mode in ("separate", "harli"):
+    for sim_mode in ("separate", "harli"):
         reqs = generate_scenario(args.scenario, args.duration, args.rps,
                                  seed=args.seed + 1, n_sessions=n_sessions)
         res = simulate_cluster(
             cfg_i, cfg_f, reqs,
-            SimConfig(mode=mode, qos_s=args.qos_ms / 1e3,
+            SimConfig(mode=sim_mode, qos_s=args.qos_ms / 1e3,
                       seed=args.seed + 2),
             ClusterConfig(
                 n_initial=args.instances,
                 autoscale=not args.no_autoscale,
+                prefill_mode=mode,
                 prefill=prefill,
+                chunked=ChunkedPrefillConfig(
+                    budget_tokens=args.chunk_budget),
+                prefix_cache=cache,
                 router=RouterConfig(policy=args.policy,
                                     ttft_slo_s=args.ttft_slo,
                                     tpot_slo_s=args.qos_ms / 1e3),
                 autoscaler=AutoscalerConfig()))
-        out[mode] = res
+        out[sim_mode] = res
         s = res.stats
         acts = [d for d in res.decisions if d.action != "none"]
-        print(f"{mode:9s} goodput={s.goodput:6.2f} req/s  "
+        print(f"{sim_mode:9s} goodput={s.goodput:6.2f} req/s  "
               f"throughput={s.throughput:6.2f} req/s  "
               f"SLO-attain={s.slo_attainment*100:5.1f}%")
         print(f"{'':9s} TTFT-attain={s.ttft_attainment*100:5.1f}% "
               f"TPOT-attain={s.tpot_attainment*100:5.1f}% "
               f"rejected={s.rejected}  "
               f"QoS-violations={res.qos_violation_frac*100:5.2f}%")
-        if prefill:
+        if mode != "chained":
             print(f"{'':9s} TTFT p99={s.ttft_p99:5.2f}s = "
                   f"queue {s.ttft_queue_p99:.2f} + "
                   f"prefill {s.ttft_prefill_p99:.2f} + "
-                  f"decode-wait {s.ttft_decode_wait_p99:.2f} (stage p99s)  "
-                  f"prefill-pool={res.final_prefill} final / "
-                  f"{res.peak_prefill} peak")
+                  f"decode-wait {s.ttft_decode_wait_p99:.2f} (stage p99s)",
+                  end="")
+            if mode == "pooled":
+                print(f"  prefill-pool={res.final_prefill} final / "
+                      f"{res.peak_prefill} peak")
+            else:
+                print(f"  chunk-budget={res.final_chunk_budget} final")
+        if cache is not None:
+            tot = res.prefix_hits + res.prefix_misses
+            print(f"{'':9s} prefix-cache: {res.prefix_hits}/{tot} hits, "
+                  f"{res.prefix_hit_tokens} prefill tokens saved")
         print(f"{'':9s} ft_throughput={res.ft_throughput:6.2f} "
               f"(iters/s x batch)  fleet={res.final_fleet} final / "
               f"{res.peak_fleet} peak  scale-actions={len(acts)} "

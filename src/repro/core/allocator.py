@@ -8,7 +8,10 @@ inference model's weights). Three typed sub-pools share it:
   * finetune window — whole chunks lent to the finetune task to hold frozen
                      layer weights (window-based swapping, §4.3);
   * small-tensor pool — fixed-size buddy-managed region (2KB granularity)
-                     for sub-2MB activations (§4.5).
+                     for sub-2MB activations (§4.5);
+  * prefix cache    — whole chunks lent to the session prefix cache
+                     (core/prefix_cache.py) so sticky-session KV reuse is
+                     charged against the same reusable pool as the window.
 
 Mechanism difference vs the paper (recorded in DESIGN.md §2): CUDA VMM
 remapping is replaced by budget re-partitioning at decode-round boundaries
@@ -50,6 +53,7 @@ class UnifiedAllocator:
         assert self.total_chunks > 0, "pool smaller than one chunk"
         self.kv_chunks = 0
         self.window_chunks = 0
+        self.prefix_chunks = 0         # session prefix cache (prefix_cache.py)
         self.kv_tokens = 0
         self.reclaims = 0              # window chunks reclaimed by KV pressure
         self.small = BuddyAllocator(cfg.small_pool_bytes)
@@ -63,7 +67,8 @@ class UnifiedAllocator:
 
     @property
     def free_chunks(self) -> int:
-        return self.total_chunks - self.kv_chunks - self.window_chunks
+        return self.total_chunks - self.kv_chunks - self.window_chunks \
+            - self.prefix_chunks
 
     @property
     def reserved_chunks(self) -> int:
@@ -104,6 +109,19 @@ class UnifiedAllocator:
             if self.kv_tokens else 0
         self.kv_chunks = max(need_chunks, 0)
 
+    # --------------------------------------------------------- prefix ----
+    def prefix_reserve(self, chunks: int) -> int:
+        """Carve session-prefix-cache capacity out of the reusable pool.
+        Charged like the finetune window — it shrinks both the window
+        capacity and (via the caller reducing its KV admission budget) the
+        KV pool — so cached prefixes are real memory, not free TTFT. The
+        grant never eats the §4.4 reserved headroom. Returns chunks
+        granted (may be fewer than asked)."""
+        granted = max(min(chunks, self.free_chunks - self.reserved_chunks),
+                      0)
+        self.prefix_chunks += granted
+        return granted
+
     # --------------------------------------------------------- window ----
     def window_capacity_chunks(self) -> int:
         """How many chunks the finetune window may hold right now: free
@@ -131,6 +149,7 @@ class UnifiedAllocator:
             "t": t,
             "kv_bytes": self.kv_chunks * self.chunk_bytes,
             "window_bytes": self.window_chunks * self.chunk_bytes,
+            "prefix_bytes": self.prefix_chunks * self.chunk_bytes,
             "small_bytes": self.cfg.small_pool_bytes,
             "free_bytes": self.free_chunks * self.chunk_bytes,
             "kv_tokens": self.kv_tokens,
@@ -142,6 +161,8 @@ class UnifiedAllocator:
     def check_invariants(self) -> None:
         assert 0 <= self.kv_chunks
         assert 0 <= self.window_chunks
-        assert self.kv_chunks + self.window_chunks <= self.total_chunks
+        assert 0 <= self.prefix_chunks
+        assert self.kv_chunks + self.window_chunks + self.prefix_chunks \
+            <= self.total_chunks
         assert self.kv_tokens <= self.kv_capacity_tokens() or \
             self.kv_chunks == 0

@@ -22,7 +22,11 @@ loss or queue depth, shrink on deep idle, and never below a floor that is
 *coordinated* with the decode loop — ``prefill_per_decode`` workers per
 serving instance — so the two tiers move together when the fleet scales.
 Actions: ``add_prefill`` / ``remove_prefill``, logged in the same decision
-stream.
+stream. The loop is *mode-aware*: in chunked deployments
+(prefill_mode="chunked", core/cluster.py) there is no pool to size, so the
+same control slot runs ``evaluate_chunked`` instead and tunes the fleet's
+per-round prefill chunk budget against TTFT headroom
+(``grow_chunk_budget`` / ``shrink_chunk_budget``).
 
 The controller is pure policy: it never touches instances itself, the
 cluster event loop (core/cluster.py) applies decisions. That keeps the
@@ -39,7 +43,8 @@ from typing import Dict, List, Optional
 
 ACTIONS = ("none", "add_instance", "remove_instance",
            "to_decode", "to_colocated", "to_finetune",
-           "add_prefill", "remove_prefill")
+           "add_prefill", "remove_prefill",
+           "grow_chunk_budget", "shrink_chunk_budget")
 
 
 @dataclasses.dataclass
@@ -64,6 +69,11 @@ class AutoscalerConfig:
     ttft_headroom: float = 0.6       # wait_p99 above frac*TTFT-SLO -> grow
     prefill_idle_backlog_s: float = 0.05  # backlog below + empty -> shrink
     prefill_cooldown_ticks: int = 0
+    # ---- chunked-mode prefill loop (prefill_mode="chunked"): there is no
+    # pool to size, so the same control slot tunes the per-round chunk
+    # budget instead — grow when TTFT headroom erodes, give the tokens
+    # back to decode/finetune when TTFT is comfortable but TPOT is not
+    chunk_step_tokens: int = 64      # budget delta per action
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +215,59 @@ class Autoscaler:
             return ScaleDecision(t, "remove_prefill",
                                  reason=f"idle backlog={snap.backlog_s:.2f}")
         return ScaleDecision(t, "none")
+
+    def _decide_chunked(self, t: float, wait_p99: float, viol_frac: float,
+                        budget: int, lo: int, hi: int, n_serving: int
+                        ) -> ScaleDecision:
+        cfg = self.cfg
+        slo = self.prefill_ttft_slo_s
+        step = cfg.chunk_step_tokens
+        # TTFT headroom eroding -> spend more of each round on prefill;
+        # once the budget is maxed (or the QoS price caps below it), the
+        # only remaining lever is decode capacity itself — in chunked mode
+        # prefill capacity IS the decode fleet, so this loop may grow it
+        if slo > 0 and wait_p99 > cfg.ttft_headroom * slo:
+            if budget < hi:
+                # multiplicative increase / additive decrease: a backlog
+                # compounds while the budget crawls, so growth must outrun
+                # it — escalation to fleet growth then starts within a few
+                # ticks instead of after max_budget/step of them
+                return ScaleDecision(
+                    t, "grow_chunk_budget", target=min(budget * 2, hi),
+                    reason=f"chunk_wait_p99={wait_p99:.2f}")
+            if n_serving < cfg.max_decode:
+                return ScaleDecision(
+                    t, "add_instance",
+                    reason=f"chunk_wait_p99={wait_p99:.2f} budget maxed")
+            return ScaleDecision(t, "none", reason="at max_decode")
+        # TTFT comfortable but TPOT under pressure -> hand tokens back
+        if budget > lo and viol_frac > cfg.viol_frac_shed and \
+                (slo <= 0 or wait_p99 < 0.5 * cfg.ttft_headroom * slo):
+            return ScaleDecision(
+                t, "shrink_chunk_budget", target=max(budget - step, lo),
+                reason=f"viol={viol_frac:.3f}")
+        return ScaleDecision(t, "none")
+
+    def evaluate_chunked(self, t: float, wait_p99: float, viol_frac: float,
+                         budget: int, lo: int, hi: int, n_serving: int = 0
+                         ) -> ScaleDecision:
+        """Chunked-mode variant of the prefill control loop: no pool to
+        size, so it tunes the fleet-wide per-round chunk budget against
+        TTFT headroom (``target`` on the decision carries the new budget),
+        escalating to ``add_instance`` once the budget is maxed. Shares
+        the prefill loop's cooldown — it occupies the same control slot,
+        just mode-aware."""
+        if self._prefill_cooldown > 0:
+            self._prefill_cooldown -= 1
+            d = ScaleDecision(t, "none", reason="prefill cooldown")
+        else:
+            d = self._decide_chunked(t, wait_p99, viol_frac, budget, lo, hi,
+                                     n_serving)
+            if d.action != "none":
+                self._prefill_cooldown = self.cfg.prefill_cooldown_ticks
+        assert d.action in ACTIONS
+        self.decisions.append(d)
+        return d
 
     def evaluate_prefill(self, t: float, snap, n_serving: int
                          ) -> ScaleDecision:

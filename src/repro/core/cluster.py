@@ -17,9 +17,16 @@ Composes the pieces into one discrete-event experiment:
     loop sizes the pool against TTFT headroom with a floor that tracks the
     serving fleet.
 
-``ClusterConfig.prefill = None`` falls back to PR 1's per-instance
-serialized prefill chain — kept as the measurable baseline the
-disaggregated pool is compared against (tests/test_cluster.py).
+Three deployment modes (``ClusterConfig.prefill_mode``; docs/cluster.md):
+``chained`` is PR 1's per-instance serialized prefill chain (the measurable
+baseline, also selected by ``prefill=None``); ``pooled`` is the
+disaggregated pool above; ``chunked`` mixes prefill chunks into the decode
+instances' own rounds under a QoS-priced per-round token budget (FlexLLM-
+style token-level co-serving) — no prefill tier at all, and the
+autoscaler's prefill loop tunes the chunk budget instead of a pool size.
+``ClusterConfig.prefix_cache`` additionally gives every serving instance a
+session prefix cache (core/prefix_cache.py) so sticky routing shortens
+effective prefill on hits.
 
 Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
   harli    — every serving instance co-locates a finetune job, dynamic
@@ -40,8 +47,11 @@ from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot, ScaleDecision)
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.prefill_pool import PrefillPool, PrefillPoolConfig
-from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
-from repro.core.simulator import DecodeInstanceSim, SimConfig, fit_predictor
+from repro.core.prefix_cache import PrefixCacheConfig
+from repro.core.router import (PREFILL_MODES, ClusterRouter, ClusterStats,
+                               RouterConfig)
+from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
+                                  SimConfig, fit_predictor)
 from repro.models.config import ModelConfig
 from repro.serving.request import Request
 
@@ -56,9 +66,25 @@ class ClusterConfig:
     router: RouterConfig = dataclasses.field(default_factory=RouterConfig)
     autoscaler: AutoscalerConfig = dataclasses.field(
         default_factory=AutoscalerConfig)
+    # deployment mode: "chained" | "pooled" | "chunked". None (default)
+    # derives it from `prefill` for backward compatibility: a pool config
+    # means "pooled", prefill=None means the PR 1 chain ("chained")
+    prefill_mode: Optional[str] = None
     # prefill tier: None = legacy per-instance prefill chain (PR 1)
     prefill: Optional[PrefillPoolConfig] = dataclasses.field(
         default_factory=PrefillPoolConfig)
+    # chunked-mode knobs (per-round token budget + autoscaler range)
+    chunked: ChunkedPrefillConfig = dataclasses.field(
+        default_factory=ChunkedPrefillConfig)
+    # per-instance session prefix cache; None = cache-less (PR 3 behaviour)
+    prefix_cache: Optional[PrefixCacheConfig] = None
+
+    def resolved_mode(self) -> str:
+        mode = self.prefill_mode
+        if mode is None:
+            mode = "pooled" if self.prefill is not None else "chained"
+        assert mode in PREFILL_MODES, mode
+        return mode
 
 
 @dataclasses.dataclass
@@ -81,6 +107,14 @@ class ClusterResult:
     peak_fleet: int = 0
     final_prefill: int = 0
     peak_prefill: int = 0
+    # chunked mode: the per-round budget's control trajectory
+    chunk_budget_timeline: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+    final_chunk_budget: int = 0
+    # session prefix cache, aggregated over the fleet
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_hit_tokens: int = 0
 
 
 class ClusterSim:
@@ -101,19 +135,27 @@ class ClusterSim:
         if rcfg.seed == 0:
             rcfg = dataclasses.replace(
                 rcfg, seed=sim.seed + ROUTER_SEED_SALT)
+        self.mode = cluster.resolved_mode()
         pool = None
-        if cluster.prefill is not None:
+        if self.mode == "pooled":
             pool = PrefillPool(
-                cluster.prefill, CostModel(cfg_inf, spec, seed=sim.seed + 7),
+                cluster.prefill or PrefillPoolConfig(),
+                CostModel(cfg_inf, spec, seed=sim.seed + 7),
                 ttft_slo_s=rcfg.ttft_slo_s)
         self.router = ClusterRouter(
             rcfg, CostModel(cfg_inf, spec, seed=sim.seed + 7),
-            prefill_pool=pool, predictor=self.predictor)
+            prefill_pool=pool, predictor=self.predictor, mode=self.mode)
         self.autoscaler = Autoscaler(cluster.autoscaler)
         self.autoscaler.prefill_ttft_slo_s = rcfg.ttft_slo_s
         self._next_id = 0
         self._fleet_timeline: List[Tuple[float, int, int]] = []
         self._prefill_timeline: List[Tuple[float, int, int]] = []
+        self._chunk_timeline: List[Tuple[float, int]] = []
+        # the initial budget must already sit inside the control loop's
+        # operating range, or the AIMD tuner starts out of bounds
+        ccfg = cluster.chunked
+        self._chunk_budget = int(min(max(ccfg.budget_tokens,
+                                         ccfg.min_budget), ccfg.max_budget))
         self._peak_total = 0
         self._peak_prefill = len(pool.workers) if pool is not None else 0
         if sim.mode == "separate":
@@ -127,11 +169,17 @@ class ClusterSim:
     # ------------------------------------------------------------ fleet --
     def _spawn(self, t: float, role: str, colocate: bool = True,
                serves_inference: bool = True) -> DecodeInstanceSim:
+        chunked = None
+        if self.mode == "chunked" and serves_inference:
+            # a late joiner starts at the fleet's CURRENT budget, not t=0's
+            chunked = dataclasses.replace(
+                self.cluster.chunked, budget_tokens=self._chunk_budget)
         inst = DecodeInstanceSim(
             self._next_id, self.cfg_inf if serves_inference else self.cfg_ft,
             self.cfg_ft if colocate else None, self.sim,
             self.predictor, self.sim.seed + self._next_id,
-            serves_inference=serves_inference, t0=t, role=role)
+            serves_inference=serves_inference, t0=t, role=role,
+            chunked=chunked, prefix_cache=self.cluster.prefix_cache)
         self._next_id += 1
         self.router.add_instance(inst, now=t)
         return inst
@@ -208,6 +256,18 @@ class ClusterSim:
             pool.drain_worker(
                 min_workers=max(self.cluster.autoscaler.min_prefill, 1))
 
+    def _apply_chunked(self, d: ScaleDecision) -> None:
+        """Fleet-wide chunk-budget change (the decision's target carries
+        the new budget); future spawns inherit it via _spawn."""
+        if d.action not in ("grow_chunk_budget", "shrink_chunk_budget"):
+            return
+        ccfg = self.cluster.chunked
+        self._chunk_budget = int(
+            min(max(d.target, ccfg.min_budget), ccfg.max_budget))
+        for inst in self.router.instances.values():
+            if inst.chunked is not None:
+                inst.chunk_budget = self._chunk_budget
+
     # ------------------------------------------------------------- loop --
     def run(self, reqs: List[Request],
             duration: Optional[float] = None) -> ClusterResult:
@@ -235,9 +295,9 @@ class ClusterSim:
             if pool is not None:
                 pool.retire_drained(epoch_end)
             if cl.autoscale and epoch_end + 1e-9 >= next_control:
+                viol = self.router.recent_violation_frac()
                 d = self.autoscaler.evaluate(
-                    epoch_end, self._snapshots(),
-                    self.router.recent_violation_frac(),
+                    epoch_end, self._snapshots(), viol,
                     self._ft_backlog(epoch_end))
                 self._apply(d, epoch_end)
                 if pool is not None:
@@ -245,6 +305,21 @@ class ClusterSim:
                         epoch_end, pool.snapshot(epoch_end),
                         n_serving=len(self._serving()))
                     self._apply_prefill(pd, epoch_end)
+                elif self.mode == "chunked":
+                    # mode-aware prefill loop: no pool to size — tune the
+                    # per-round chunk budget against TTFT headroom, and
+                    # escalate to fleet growth once the budget is maxed
+                    ccfg = cl.chunked
+                    cd = self.autoscaler.evaluate_chunked(
+                        epoch_end,
+                        self.router.recent_chunk_wait_p99(epoch_end),
+                        viol, self._chunk_budget,
+                        ccfg.min_budget, ccfg.max_budget,
+                        n_serving=len(self._serving()))
+                    if cd.action == "add_instance":
+                        self._apply(cd, epoch_end)
+                    else:
+                        self._apply_chunked(cd)
                 next_control += cl.autoscaler.interval_s
             t = epoch_end
             self._fleet_point(t, self._serving())
@@ -262,6 +337,8 @@ class ClusterSim:
             n_active = len(pool.active_workers())
             self._prefill_timeline.append((t, n_active, pool.queue_depth))
             self._peak_prefill = max(self._peak_prefill, n_active)
+        if self.mode == "chunked":
+            self._chunk_timeline.append((t, self._chunk_budget))
 
     def _result(self, duration: float) -> ClusterResult:
         for inst in self.router.all_instances():
@@ -290,6 +367,14 @@ class ClusterSim:
         if pool is not None:
             res.final_prefill = len(pool.active_workers())
             res.peak_prefill = max(self._peak_prefill, res.final_prefill)
+        if self.mode == "chunked":
+            res.chunk_budget_timeline = self._chunk_timeline
+            res.final_chunk_budget = self._chunk_budget
+        for inst in self.router.all_instances():
+            if inst.prefix_cache is not None:
+                res.prefix_hits += inst.prefix_cache.stats.hits
+                res.prefix_misses += inst.prefix_cache.stats.misses
+                res.prefix_hit_tokens += inst.prefix_cache.stats.hit_tokens
         return res
 
 

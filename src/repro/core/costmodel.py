@@ -196,6 +196,55 @@ class CostModel:
             + k_units * UNIT_OVERHEAD_S
         return t * (self._noise() if noisy else 1.0)
 
+    def chunk_work(self, chunk_tokens: int, chunk_ctx: float) -> DecodeWork:
+        """Bytes/FLOPs of a prefill chunk processed inside a decode round
+        (chunked prefill, FlexLLM-style token-level co-serving). Token work
+        mirrors ``prefill_latency``: dense FLOPs per token plus attention of
+        the chunk against the ``chunk_ctx`` tokens already resident (cached
+        prefix + previously prefilled chunks). The weight stream is NOT
+        charged here — the fused round pays it once via the decode side."""
+        cfg = self.cfg
+        active = cfg.active_param_count()
+        flops = 2.0 * active * chunk_tokens \
+            + 4.0 * chunk_tokens * cfg.effective_cache_len(
+                int(chunk_ctx + chunk_tokens / 2)) \
+            * len(cfg.attn_layer_indices()) * cfg.num_heads * cfg.head_dim
+        bytes_hbm = chunk_tokens * cfg.d_model * 2 * 8
+        return DecodeWork(bytes_hbm=bytes_hbm, flops=flops, ici_s=0.0)
+
+    def mixed_round_latency(self, bs: int, mean_ctx: float,
+                            chunk_tokens: int, chunk_ctx: float = 0.0,
+                            k_units: int = 0, micro_batch: int = 2,
+                            seq_len: int = 1024,
+                            noisy: bool = True) -> float:
+        """One decode round with ``chunk_tokens`` of prefill work mixed in
+        (prefill_mode="chunked"): decode token work, the prefill chunk and
+        optionally k finetune units share one fused launch. The weight
+        stream and dispatch overhead are paid once — the chunk piggybacks
+        on decode's memory traffic and fills its idle compute, which is the
+        chunked-prefill win; the cost is the chunk's FLOPs landing on the
+        round's critical path (the TPOT impact the predictor prices).
+        ``bs == 0`` models a prefill-only round (weight stream still paid).
+        Reduces to ``colocated_round``/``decode_solo`` at chunk_tokens=0."""
+        d = self.decode_work(bs, mean_ctx) if bs > 0 else DecodeWork(
+            bytes_hbm=self.cfg.active_param_count() * 2.0, flops=0.0,
+            ici_s=0.0)
+        c = self.chunk_work(chunk_tokens, chunk_ctx) if chunk_tokens > 0 \
+            else DecodeWork(0.0, 0.0, 0.0)
+        total_bytes = d.bytes_hbm + c.bytes_hbm
+        total_flops = d.flops + c.flops
+        if k_units > 0:
+            u = self.avg_unit_work(micro_batch, seq_len)
+            total_bytes += k_units * u.bytes_hbm
+            total_flops += k_units * u.flops
+        t_mem = total_bytes / self.inst.hbm_bw
+        t_comp = total_flops / self.inst.peak_flops
+        t = max(t_mem, t_comp) + (1.0 - OVERLAP_EFF) * min(t_mem, t_comp)
+        t += d.ici_s + STEP_OVERHEAD_S \
+            + self.cfg.num_layers * PER_LAYER_OVERHEAD_S \
+            + k_units * UNIT_OVERHEAD_S
+        return t * (self._noise() if noisy else 1.0)
+
     def unit_solo(self, micro_batch: int, seq_len: int,
                   backward: bool = False, noisy: bool = True) -> float:
         u = self.unit_work(micro_batch, seq_len, backward)

@@ -37,6 +37,10 @@ class FitReport:
     colo_max_err: float = 0.0
     colo_paper_mean_err: float = 0.0    # Eq. 3 verbatim, under fusion
     colo_paper_max_err: float = 0.0
+    mixed_fit_s: float = 0.0            # chunked-prefill stage
+    mixed_samples: int = 0
+    mixed_mean_err: float = 0.0
+    mixed_max_err: float = 0.0
 
 
 class TwoStageLatencyPredictor:
@@ -49,6 +53,7 @@ class TwoStageLatencyPredictor:
         self.solo_coef: Dict[float, np.ndarray] = {}   # q_inf -> (b0, c0, k0)
         self.colo_coef: Optional[np.ndarray] = None    # Eq. 3 (b1, k1)
         self.colo_lr_coef: Optional[np.ndarray] = None  # roofline-LR
+        self.mixed_coef: Optional[np.ndarray] = None    # chunked-prefill
         self.report = FitReport()
 
     # ------------------------------------------------------------- stage 1
@@ -145,6 +150,57 @@ class TwoStageLatencyPredictor:
         return float(self._colo_features(q_ft, bs, seqlen)
                      @ self.colo_lr_coef)
 
+    # ------------------------------------------- stage 3 (chunked prefill)
+    #
+    # Mixed-round model for prefill_mode="chunked" (core/simulator.py): a
+    # decode round that also carries `chunk_tokens` of prefill work. The
+    # chunk's FLOPs are additive on the fused round's critical path (the
+    # same linearity Eq. 5 gives the finetune quantum), so the model is
+    # linear in the co-location baseline and the chunk size:
+    #     L_mixed = a * L_colo(q_ft, bs, s) + b * chunk_tokens + c
+    # Its inverse (`max_chunk_tokens`) is what the chunked scheduler uses
+    # to price a chunk's TPOT impact BEFORE admitting it into a round —
+    # the QoS guarantee stays prediction-driven, exactly like the finetune
+    # quantum path.
+    def _mixed_features(self, q_ft, bs, s, chunk_tokens):
+        base = self.predict_colo(q_ft, bs, s)
+        return np.array([base, float(chunk_tokens), 1.0], np.float64)
+
+    def fit_mixed(self, samples: List[Tuple[float, int, int, int, float]]
+                  ) -> None:
+        """samples: [(q_ft, bs, seqlen, chunk_tokens, latency_s)]."""
+        t0 = time.perf_counter()
+        X = np.stack([self._mixed_features(q, bs, s, ct)
+                      for q, bs, s, ct, _ in samples])
+        y = np.array([lat for *_, lat in samples], np.float64)
+        self.mixed_coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        rel = np.abs(X @ self.mixed_coef - y) / np.maximum(y, 1e-9)
+        self.report.mixed_fit_s = time.perf_counter() - t0
+        self.report.mixed_samples = len(y)
+        self.report.mixed_mean_err = float(np.mean(rel))
+        self.report.mixed_max_err = float(np.max(rel))
+
+    def predict_mixed(self, q_ft: float, bs: float, seqlen: float,
+                      chunk_tokens: int) -> float:
+        """Predicted round latency with a prefill chunk mixed in."""
+        if chunk_tokens <= 0 or self.mixed_coef is None:
+            return self.predict_colo(q_ft, bs, seqlen)
+        return float(self._mixed_features(q_ft, bs, seqlen, chunk_tokens)
+                     @ self.mixed_coef)
+
+    def max_chunk_tokens(self, q_ft: float, bs: float, seqlen: float,
+                         limit_s: float, cap: int) -> int:
+        """Largest prefill chunk (<= cap) whose predicted mixed-round
+        latency stays under ``limit_s`` — the admission price check."""
+        if self.mixed_coef is None:
+            return cap
+        a, b, c = self.mixed_coef
+        base = self.predict_colo(q_ft, bs, seqlen)
+        if b <= 0:                       # degenerate fit: no per-token cost
+            return cap
+        room = limit_s - (a * base + c)
+        return int(max(min(room / b, float(cap)), 0.0))
+
     def predict_latency_us(self) -> float:
         """Runtime prediction cost (paper §8.8 reports ~5us)."""
         t0 = time.perf_counter()
@@ -177,4 +233,16 @@ class TwoStageLatencyPredictor:
                     lat = cm.colocated_round(bs, s, ki, micro_batch, ft_seq)
                     colo.append((1.0 - q_ft, q_ft, bs, s, lat))
         self.fit_colo(colo)
+
+        # chunked-prefill stage: decode rounds carrying a prefill chunk.
+        # Profiled at q_ft=0 — the chunked scheduler preempts finetune on
+        # chunk rounds (inference work beats finetune, §2.3), so that is
+        # the operating point the inverse (max_chunk_tokens) prices.
+        mixed = []
+        for bs in PROFILE_BS:
+            for s in (128, 256, 512):
+                for ct in (64, 128, 256, 512):
+                    lat = cm.mixed_round_latency(bs, s, ct, chunk_ctx=s)
+                    mixed.append((0.0, bs, s, ct, lat))
+        self.fit_mixed(mixed)
         return self.report

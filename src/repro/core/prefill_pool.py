@@ -155,9 +155,12 @@ class PrefillPool:
     def _order_key(self, req: Request) -> float:
         if self.cfg.ordering == "fifo":
             return req.arrival
-        # EDF over the latest feasible start time for the TTFT deadline
+        # EDF over the latest feasible start time for the TTFT deadline.
+        # Costing uses the EFFECTIVE prompt (minus any prefix-cache credit
+        # the router granted at admission): a sticky hit genuinely needs
+        # less compute, so its deadline is later than raw length suggests.
         return req.arrival + self.ttft_slo_s \
-            - self.cm.prefill_latency(req.prompt_len)
+            - self.cm.prefill_latency(req.effective_prompt_len)
 
     def submit(self, req: Request, now: float) -> None:
         assert req.rid not in self._submitted, "request submitted twice"
@@ -221,7 +224,8 @@ class PrefillPool:
             if r.arrival > start:
                 deferred.append(item)
             elif self.cfg.ordering == "edf" and \
-                    start + self.cm.prefill_latency(r.prompt_len) > \
+                    start + self.cm.prefill_latency(
+                        r.effective_prompt_len) > \
                     r.arrival + self.ttft_slo_s:
                 heapq.heappush(self._doomed, item)
             else:
@@ -233,21 +237,21 @@ class PrefillPool:
         if feas:
             for i, item in enumerate(feas):
                 r = item[2]
-                if batch and tokens + r.prompt_len > \
+                if batch and tokens + r.effective_prompt_len > \
                         self.cfg.max_batch_tokens:
                     deferred.extend(feas[i:])
                     break
                 batch.append(r)
-                tokens += r.prompt_len
+                tokens += r.effective_prompt_len
         else:
             while self._doomed and len(batch) < self.cfg.max_batch:
                 r = self._doomed[0][2]
-                if batch and tokens + r.prompt_len > \
+                if batch and tokens + r.effective_prompt_len > \
                         self.cfg.max_batch_tokens:
                     break
                 heapq.heappop(self._doomed)
                 batch.append(r)
-                tokens += r.prompt_len
+                tokens += r.effective_prompt_len
         for item in deferred:
             heapq.heappush(self._queue, item)
         for r in batch:
@@ -272,7 +276,7 @@ class PrefillPool:
             batch = self._select_batch(start)
             assert batch, "free worker with an arrived request found none"
             lat = self.cm.prefill_batch_latency(
-                [r.prompt_len for r in batch])
+                [r.effective_prompt_len for r in batch])
             done = start + lat
             assert done >= w.last_done - 1e-12
             w.free_at = done

@@ -1,0 +1,117 @@
+"""Per-instance session prefix cache: modeled KV reuse for sticky routing.
+
+PR 3's ``session_affinity`` policy was routing-only — the sticky placement
+existed, but nothing made it *worth* anything. This module models the thing
+stickiness buys: an instance that already holds a session's prompt KV can
+skip prefill for the cached prefix, so a sticky hit shortens the request's
+effective prefill (``Request.effective_prompt_len``) and the policy's win
+shows up in TTFT, not just placement stability (SGLang's RadixAttention and
+vLLM's prefix caching are the production analogues).
+
+The cache is an LRU over sessions, capacity in tokens. Capacity is real
+memory: construction reserves whole chunks from the instance's
+``UnifiedAllocator`` reusable pool (``prefix_reserve``), which shrinks both
+the finetune window's capacity and the instance's KV admission budget — a
+bigger cache trades decode/finetune headroom for TTFT, it is not free.
+
+Everything is deterministic (plain dict/OrderedDict state, no RNG), so
+cluster runs stay bit-reproducible for a fixed seed (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+from repro.core.allocator import UnifiedAllocator
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    chunks: int = 16               # capacity asked from the unified pool
+    min_hit_tokens: int = 32       # ignore hits too small to matter
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    lookups: int = 0               # session-keyed lookups only
+    hits: int = 0
+    misses: int = 0
+    hit_tokens: int = 0            # prefill tokens saved, summed
+    insertions: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class PrefixCache:
+    """LRU of ``session_id -> cached prefix tokens`` for one instance.
+
+    ``lookup`` is called by the router at dispatch time (the instance is
+    chosen first, then its cache is consulted); ``insert`` is called by the
+    instance when a request's prompt KV becomes resident at decode
+    admission. A session moved to another instance (affinity overflow)
+    simply goes cold here and warms up there — the LRU ages it out.
+    """
+
+    def __init__(self, cfg: PrefixCacheConfig, alloc: UnifiedAllocator):
+        self.cfg = cfg
+        self.granted_chunks = alloc.prefix_reserve(max(cfg.chunks, 0))
+        self.capacity_tokens = self.granted_chunks * alloc.tokens_per_chunk
+        self._entries: "OrderedDict[int, int]" = OrderedDict()
+        self._used_tokens = 0
+        self.stats = PrefixCacheStats()
+
+    def lookup(self, session_id: int, prompt_len: int) -> int:
+        """Tokens of ``prompt_len`` covered by this session's cached prefix
+        (0 on miss). A hit refreshes the entry's LRU position. At least one
+        token always remains to prefill — the new turn's tokens are never
+        cached."""
+        self.stats.lookups += 1
+        cached = self._entries.get(session_id)
+        hit = min(cached, prompt_len - 1) if cached is not None else 0
+        if hit < self.cfg.min_hit_tokens:
+            self.stats.misses += 1
+            return 0
+        self._entries.move_to_end(session_id)
+        self.stats.hits += 1
+        self.stats.hit_tokens += hit
+        return hit
+
+    def revoke(self, hit_tokens: int) -> None:
+        """Reverse one granted hit's accounting (the router calls this
+        when a pooled-mode pin breaks after prefill already ran short):
+        the saved tokens were spent, but the hit must not count as a
+        cache win. Grant and revoke bookkeeping both live here."""
+        self.stats.hits -= 1
+        self.stats.misses += 1
+        self.stats.hit_tokens -= hit_tokens
+
+    def insert(self, session_id: int, prefix_tokens: int) -> None:
+        """Record that this session's prompt KV (``prefix_tokens``) is now
+        resident, evicting least-recently-used sessions past capacity."""
+        if self.capacity_tokens <= 0 or prefix_tokens <= 0:
+            return
+        prefix_tokens = min(prefix_tokens, self.capacity_tokens)
+        old = self._entries.pop(session_id, 0)
+        self._used_tokens -= old
+        self._entries[session_id] = prefix_tokens
+        self._used_tokens += prefix_tokens
+        self.stats.insertions += 1
+        while self._used_tokens > self.capacity_tokens:
+            _, tok = self._entries.popitem(last=False)
+            self._used_tokens -= tok
+            self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def used_tokens(self) -> int:
+        return self._used_tokens
+
+    def check_invariants(self) -> None:
+        assert self._used_tokens == sum(self._entries.values())
+        assert self._used_tokens <= max(self.capacity_tokens, 0)

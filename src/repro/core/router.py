@@ -27,10 +27,22 @@ Policies:
     least-loaded instance when the sticky one is past
     ``affinity_overflow_load``
 
-Constructing the router without a pool (``prefill_pool=None``) keeps PR 1's
-per-instance serialized prefill chain as a measurable baseline — the
-acceptance test demonstrates the disaggregated pool beats it on TTFT p99
-and goodput under the spike scenario.
+Deployment modes (``mode``; see docs/cluster.md "Three deployment modes"):
+  * ``chained`` — PR 1's per-instance serialized prefill chain (the
+    measurable baseline; ``prefill_pool=None`` implies it);
+  * ``pooled``  — the disaggregated PrefillPool above;
+  * ``chunked`` — no prefill tier at all: the request is placed on a decode
+    instance at admission and that instance runs its prefill in chunks
+    mixed into decode rounds (``DecodeInstanceSim.enqueue_chunked``), under
+    a QoS-priced per-round token budget.
+
+Session prefix cache (core/prefix_cache.py): when the chosen instance holds
+the request's session prefix, ``_credit_prefix`` shortens the effective
+prefill before any latency is charged. In pooled mode only
+``session_affinity`` benefits — the decode instance must be known *before*
+prefill runs, so the session's sticky instance is pinned at admission and
+honored at hand-off; other policies choose at hand-off, after prefill
+already ran at full length.
 
 Conservation invariant (tested): every request handed to ``dispatch`` is
 rejected, still in the prefill stage, or enqueued on exactly one decode
@@ -53,6 +65,7 @@ from repro.serving.request import Request
 
 POLICIES = ("least_loaded", "round_robin", "random",
             "predicted_latency", "session_affinity")
+PREFILL_MODES = ("chained", "pooled", "chunked")
 
 PENDING = -2     # admitted; still in the prefill stage
 REJECTED = -1
@@ -129,8 +142,15 @@ class ClusterRouter:
 
     def __init__(self, cfg: RouterConfig, prefill_cm: CostModel,
                  prefill_pool: Optional[PrefillPool] = None,
-                 predictor: Optional[TwoStageLatencyPredictor] = None):
+                 predictor: Optional[TwoStageLatencyPredictor] = None,
+                 mode: Optional[str] = None):
         assert cfg.policy in POLICIES, cfg.policy
+        if mode is None:              # legacy constructors: derive from pool
+            mode = "pooled" if prefill_pool is not None else "chained"
+        assert mode in PREFILL_MODES, mode
+        assert (mode == "pooled") == (prefill_pool is not None), \
+            "prefill pool supplied iff mode is 'pooled'"
+        self.mode = mode
         self.cfg = cfg
         self.prefill_cm = prefill_cm
         self.pool = prefill_pool
@@ -142,6 +162,7 @@ class ClusterRouter:
         self._routed_ix: Dict[int, RoutedRequest] = {}
         self._assigned: Dict[int, int] = {}         # rid -> instance id
         self._session_map: Dict[int, int] = {}      # session -> sticky inst
+        self._pinned: Dict[int, int] = {}           # rid -> pre-bound inst
         self._rng = np.random.default_rng(cfg.seed)
         self._rr_cursor = 0
 
@@ -239,13 +260,22 @@ class ClusterRouter:
             return pick
         return self._least_loaded(cand)
 
+    def _credit_prefix(self, inst: DecodeInstanceSim, req: Request) -> None:
+        """Consult the chosen instance's session prefix cache and shorten
+        the request's effective prefill by the cached prefix. Must run
+        before any prefill latency is charged."""
+        if inst.prefix_cache is not None and req.session_id >= 0:
+            req.cache_hit_tokens = inst.prefix_cache.lookup(
+                req.session_id, req.prompt_len)
+
     # --------------------------------------------------------- dispatch --
     def dispatch(self, req: Request, now: float) -> int:
-        """Admit one request. Pool mode: returns PENDING (-2) and the
+        """Admit one request. Pooled mode: returns PENDING (-2) and the
         request enters the prefill queue, or REJECTED (-1) under global
-        saturation. Legacy chain mode: routes through this instance's
-        prefill chain immediately and returns the decode instance id.
-        Exactly-once by construction."""
+        saturation. Chained mode: routes through the chosen instance's
+        serialized prefill chain immediately. Chunked mode: places the
+        request on a decode instance whose own rounds will run the prefill
+        in chunks. Exactly-once by construction."""
         assert req.rid not in self._assigned, "request routed twice"
         # admission rejects only under GLOBAL saturation: an instance past
         # reject_load is skipped as long as any other can still absorb
@@ -266,15 +296,32 @@ class ClusterRouter:
                 self._assigned[req.rid] = REJECTED
                 self._record(req, REJECTED)
                 return REJECTED
+            if self.cfg.policy == "session_affinity" and req.session_id >= 0:
+                # the cache can only shorten prefill if the decode target
+                # is known BEFORE the pool runs it: pin the session's
+                # sticky instance now and honor the pin at hand-off
+                inst = self._pick_target(cand, req)
+                self._credit_prefix(inst, req)
+                self._pinned[req.rid] = inst.inst_id
             self.pool.submit(req, now)
             self._assigned[req.rid] = PENDING
             self._record(req, PENDING)
             return PENDING
-        # legacy (PR 1) path: prefill serialized on the chosen instance's
-        # prefill partner, then decode admission takes over
         inst = self._pick_target(cand, req)
+        self._credit_prefix(inst, req)
+        if self.mode == "chunked":
+            # no prefill tier: the instance itself chunks the prefill into
+            # its decode rounds; load()/queue_depth include the chunk queue
+            # so admission backpressure keeps working
+            inst.enqueue_chunked(req, now)
+            self._assigned[req.rid] = inst.inst_id
+            self._record(req, inst.inst_id)
+            return inst.inst_id
+        # chained (PR 1) path: prefill serialized on the chosen instance's
+        # prefill partner, then decode admission takes over
         t_start = max(self._prefill_free[inst.inst_id], req.arrival, now)
-        ready = t_start + self.prefill_cm.prefill_latency(req.prompt_len)
+        ready = t_start + self.prefill_cm.prefill_latency(
+            req.effective_prompt_len)
         self._prefill_free[inst.inst_id] = ready
         req.prefill_done = ready
         inst.enqueue(req, ready)
@@ -313,13 +360,45 @@ class ClusterRouter:
             cand = [i for i in self.instances.values()
                     if i.serves_inference and i.role != "finetune"]
         assert cand, "no inference-capable instance left in the fleet"
-        inst = self._pick_target(cand, req)
+        pin = self._pinned.pop(req.rid, None)
+        inst = None
+        if pin is not None:
+            # session pinned at admission (its prefix-cache credit already
+            # shortened the prefill): honor the pin while the instance can
+            # still take traffic; fall back to the policy if it left
+            pinned = self.instances.get(pin)
+            if pinned is not None and pinned.serves_inference \
+                    and pinned.role != "finetune" and not pinned.draining:
+                inst = pinned
+            elif req.cache_hit_tokens > 0:
+                # pin broken mid-prefill (retired / flipped / draining):
+                # the shortened prefill already ran and can't be re-costed,
+                # but the hit must not count as a cache win — un-credit it
+                # on the cache that granted it
+                granter = self.instances.get(pin) or self.retired.get(pin)
+                if granter is not None and granter.prefix_cache is not None:
+                    granter.prefix_cache.revoke(req.cache_hit_tokens)
+                req.cache_hit_tokens = 0
+        if inst is None:
+            inst = self._pick_target(cand, req)
         inst.enqueue(req, ready)
         self._assigned[req.rid] = inst.inst_id
         self._routed_ix[req.rid].instance = inst.inst_id
         return inst.inst_id
 
     # ---------------------------------------------------------- metrics --
+    def recent_chunk_wait_p99(self, now: float) -> float:
+        """Fleet-wide p99 of recent chunked-prefill waits (arrival ->
+        prefill-done) — the TTFT-headroom signal the autoscaler's
+        chunk-budget loop reads in chunked mode. Per-instance windows are
+        merged by pooling the recent samples."""
+        samples: List[float] = []
+        for inst in self.instances.values():
+            samples.extend(inst.recent_chunk_waits(now))
+        if not samples:
+            return 0.0
+        return float(np.percentile(samples, 99))
+
     def recent_violation_frac(self, window: int = 200) -> float:
         """Fraction of the fleet's last `window` decode-round TPOT samples
         over the SLO — the autoscaler's QoS-headroom signal. Samples are

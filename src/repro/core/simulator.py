@@ -17,13 +17,15 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.allocator import AllocatorConfig, UnifiedAllocator
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.predictor import TwoStageLatencyPredictor
+from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.core.scheduler import QoSScheduler, SchedulerConfig
 from repro.distributed.fault_tolerance import (StragglerConfig,
                                                StragglerMitigator)
@@ -69,6 +71,24 @@ class SimResult:
         dataclasses.field(default_factory=list)   # (t, k, round_latency, bs)
     memory_timeline: List[Dict] = dataclasses.field(default_factory=list)
     predictor_report: Optional[object] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedPrefillConfig:
+    """prefill_mode="chunked" (core/cluster.py): prefill chunks are mixed
+    into decode rounds on the serving instance itself, under a per-round
+    token budget — no separate prefill tier. The budget is the control
+    knob the autoscaler's mode-aware prefill loop tunes against TTFT
+    headroom (``Autoscaler.evaluate_chunked``)."""
+    budget_tokens: int = 256         # per-round chunk budget at t=0
+    min_budget: int = 64             # autoscaler tuning range
+    max_budget: int = 1024
+    chunk_wait_window_s: float = 15.0   # recency horizon, TTFT signal
+    # fraction of the TPOT target a chunk-carrying round may fill: the
+    # remainder absorbs predictor fit error and measurement noise, so
+    # admitting chunks at the priced limit doesn't push per-request TPOT
+    # p99 over the SLO (which carries only tpot_slack=5% of slack)
+    qos_margin: float = 0.85
 
 
 # ---------------------------------------------------------------- finetune
@@ -224,11 +244,14 @@ class DecodeInstanceSim:
                  cfg_ft: Optional[ModelConfig], sim: SimConfig,
                  predictor: Optional[TwoStageLatencyPredictor], seed: int,
                  serves_inference: bool = True, t0: float = 0.0,
-                 role: Optional[str] = None):
+                 role: Optional[str] = None, *,
+                 chunked: Optional[ChunkedPrefillConfig] = None,
+                 prefix_cache: Optional[PrefixCacheConfig] = None):
         self.inst_id = inst_id
         self.sim = sim
         self.cfg_inf = cfg_inf
         self.serves_inference = serves_inference
+        self.predictor = predictor
         spec = InstanceSpec(tp=sim.tp)
         self.cm_inf = CostModel(cfg_inf, spec, seed=seed)
         self.colocate = cfg_ft is not None
@@ -289,6 +312,22 @@ class DecodeInstanceSim:
         self.all_reqs: List[Request] = []
         self.dropped = 0                 # requests that could never fit
         self._snap_ctr = 0
+        # ---- chunked prefill (prefill_mode="chunked") -------------------
+        self.chunked = chunked
+        self.chunk_budget = chunked.budget_tokens if chunked else 0
+        # FIFO over arrival: chunked prefill keeps arrival order (the EDF
+        # reordering lives in the pooled tier; here fairness is per-round)
+        self._chunk_pending: List[Tuple[float, int, Request]] = []
+        self.chunk_timeline: List[Tuple[float, int, int]] = []  # (t,tok,bud)
+        self.chunk_waits: Deque[Tuple[float, float]] = deque()  # (done,wait)
+        # ---- session prefix cache ---------------------------------------
+        # reserved AFTER kv_budget_chunks: the cache's chunks come out of
+        # the KV admission budget, so cached prefixes are paid-for memory
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache is not None and serves_inference:
+            self.prefix_cache = PrefixCache(prefix_cache, self.alloc)
+            self.kv_budget_chunks = max(
+                self.kv_budget_chunks - self.prefix_cache.granted_chunks, 1)
 
     # -- external event-loop API ------------------------------------------
     def set_role(self, role: str) -> None:
@@ -303,14 +342,25 @@ class DecodeInstanceSim:
         heapq.heappush(self._pending, (ready_time, req.rid, req))
         self.all_reqs.append(req)
 
+    def enqueue_chunked(self, req: Request, now: float) -> None:
+        """Hand a request whose prefill this instance will run in chunks
+        mixed into its own decode rounds (prefill_mode="chunked"). The
+        request joins the decode queue once its last chunk completes."""
+        assert self.chunked is not None, "instance not in chunked mode"
+        heapq.heappush(self._chunk_pending,
+                       (max(req.arrival, now), req.rid, req))
+        self.all_reqs.append(req)
+
     @property
     def queue_depth(self) -> int:
-        return len(self._pending) + len(self.active)
+        return len(self._pending) + len(self._chunk_pending) \
+            + len(self.active)
 
     @property
     def drained(self) -> bool:
         """True once a draining instance has emptied and may be retired."""
-        return self.draining and not self.active and not self._pending
+        return self.draining and not self.active and not self._pending \
+            and not self._chunk_pending
 
     def load(self) -> float:
         """Occupancy signal for the router/autoscaler: active + queued
@@ -348,6 +398,98 @@ class DecodeInstanceSim:
                             ft_units_available=avail)
         return d.k
 
+    # -- chunked prefill --------------------------------------------------
+    def _chunk_qos_cap(self, bs: int, ctx: float, chunk_ctx: float) -> int:
+        """Largest chunk this round may carry without the predicted round
+        latency breaking the TPOT target — the prediction-driven admission
+        price (paper §5 applied to chunks). Chunk rounds run at q_ft=0
+        (inference work preempts finetune, §2.3). Falls back to a
+        deterministic cost-model halving search when no predictor is
+        fitted (e.g. separate mode)."""
+        budget = self.chunk_budget
+        if bs == 0:
+            return budget            # no decode tokens to protect
+        limit = self.sim.qos_s * self.chunked.qos_margin
+        if self.predictor is not None and \
+                self.predictor.mixed_coef is not None:
+            return min(budget,
+                       max(self.predictor.max_chunk_tokens(
+                           0.0, bs, ctx, limit, budget), 0))
+        tok = budget
+        while tok > 0 and self.cm_inf.mixed_round_latency(
+                bs, ctx, tok, chunk_ctx, noisy=False) > limit:
+            tok //= 2
+        return tok
+
+    def _select_chunk(self, bs: int, ctx: float
+                      ) -> Tuple[int, float, List[Tuple[Request, int]]]:
+        """Plan this round's prefill chunk: FIFO over arrived pending
+        requests, capped by the per-round budget and (when decode tokens
+        share the round) the QoS price. Returns (tokens, mean chunk
+        context, [(request, tokens taken)]); nothing is committed until
+        ``_apply_chunk`` runs with the round's end time."""
+        takes: List[Tuple[Request, int]] = []
+        if not self.chunked or not self._chunk_pending \
+                or self._chunk_pending[0][0] > self.t:
+            return 0, 0.0, takes
+        head = self._chunk_pending[0][2]
+        left = self._chunk_qos_cap(
+            bs, ctx, head.cache_hit_tokens + head.prefilled_tokens)
+        total, ctx_accum = 0, 0.0
+        # walk the heap in FIFO (arrival, rid) order by popping, then push
+        # every popped item back — the plan usually consumes 1-2 heads, so
+        # this stays O(k log n) instead of sorting the whole queue per round
+        popped: List[Tuple[float, int, Request]] = []
+        while self._chunk_pending and left > 0:
+            item = heapq.heappop(self._chunk_pending)
+            popped.append(item)
+            if item[0] > self.t:
+                break
+            r = item[2]
+            rem = r.effective_prompt_len - r.prefilled_tokens
+            tok = min(rem, left)
+            takes.append((r, tok))
+            ctx_accum += (r.cache_hit_tokens + r.prefilled_tokens
+                          + tok / 2) * tok
+            total += tok
+            left -= tok
+        for item in popped:
+            heapq.heappush(self._chunk_pending, item)
+        mean_ctx = ctx_accum / total if total else 0.0
+        return total, mean_ctx, takes
+
+    def _apply_chunk(self, takes: List[Tuple[Request, int]],
+                     start: float, end: float) -> None:
+        """Commit a planned chunk after its round ran: advance per-request
+        progress, and move fully-prefilled requests to the decode queue."""
+        finished_rids = set()
+        for r, tok in takes:
+            if r.prefill_start < 0:
+                r.prefill_start = start
+            r.prefilled_tokens += tok
+            if r.prefilled_tokens >= r.effective_prompt_len:
+                r.prefill_done = end
+                finished_rids.add(r.rid)
+                self.chunk_waits.append((end, end - r.arrival))
+                heapq.heappush(self._pending, (end, r.rid, r))
+        if finished_rids:
+            self._chunk_pending = [
+                item for item in self._chunk_pending
+                if item[1] not in finished_rids]
+            heapq.heapify(self._chunk_pending)
+
+    def recent_chunk_waits(self, now: float) -> List[float]:
+        """Arrival -> prefill-done waits of chunked requests completed
+        within the recency window (old samples are pruned). The router
+        pools these fleet-wide into the TTFT-headroom p99 the autoscaler's
+        chunk-budget loop reads (mirrors PrefillPool.wait_p99)."""
+        if not self.chunked:
+            return []
+        lo = now - self.chunked.chunk_wait_window_s
+        while self.chunk_waits and self.chunk_waits[0][0] < lo:
+            self.chunk_waits.popleft()
+        return [w for t, w in self.chunk_waits if t >= lo]
+
     # -- one simulation event ---------------------------------------------
     def _admit(self) -> None:
         while self._pending and self._pending[0][0] <= self.t \
@@ -369,6 +511,10 @@ class DecodeInstanceSim:
             r.token_times.append(self.t)    # first token from prefill
             r.generated = 1
             self.active.append(r)
+            if self.prefix_cache is not None and r.session_id >= 0:
+                # the prompt KV is resident from here on: later requests of
+                # this session routed here skip prefill for the prefix
+                self.prefix_cache.insert(r.session_id, r.prompt_len)
 
     def step(self, until: float) -> float:
         """Advance the instance clock by ONE event (an idle fast-forward, a
@@ -381,9 +527,32 @@ class DecodeInstanceSim:
         self._admit()
         bs = len(self.active)
         ctx = (sum(r.context_len for r in self.active) / bs) if bs else 0.0
+        chunk_ready = bool(self._chunk_pending) \
+            and self._chunk_pending[0][0] <= self.t
+        # ---- prefill-only round (chunked mode, no active decode) --------
+        if bs == 0 and chunk_ready:
+            tokens, chunk_ctx, takes = self._select_chunk(0, 0.0)
+            if tokens > 0:
+                start = self.t
+                lat = self.cm_inf.mixed_round_latency(0, 0.0, tokens,
+                                                      chunk_ctx)
+                self.t += lat
+                self._apply_chunk(takes, start, self.t)
+                self.chunk_timeline.append((start, tokens,
+                                            self.chunk_budget))
+                # a prefill round is inference work: finetune yields, but
+                # its streaming channel keeps moving
+                self.quantum_timeline.append((self.t, 0, lat, 0))
+                if self.colocate:
+                    self.ft.pump_dma(self.t)
+                return self.t
         # ---- idle fast-forward ------------------------------------------
         if bs == 0:
-            nxt = min(self._pending[0][0], until) if self._pending else until
+            nxt = until
+            if self._pending:
+                nxt = min(self._pending[0][0], nxt)
+            if self._chunk_pending:
+                nxt = min(self._chunk_pending[0][0], nxt)
             if nxt <= self.t:
                 # head-of-line ready but blocked (transient alloc failure):
                 # with no active work nothing can unblock it before `until`,
@@ -408,17 +577,30 @@ class DecodeInstanceSim:
             self.t = nxt
             return self.t
         # ---- co-scheduled decode round ----------------------------------
-        k = self._pick_k(self.t, bs, ctx)
         cm = self.cm_inf
-        if k > 0:
-            lat = cm.colocated_round(bs, ctx, k, sim.micro_batch, sim.ft_seq)
-            expected = cm.colocated_round(bs, ctx, k, sim.micro_batch,
-                                          sim.ft_seq, noisy=False)
+        chunk_tokens, chunk_ctx, takes = (
+            self._select_chunk(bs, ctx) if chunk_ready else (0, 0.0, []))
+        if chunk_tokens > 0:
+            # the round carries a prefill chunk: inference work preempts
+            # finetune (§2.3), so the quantum is 0 and the chunk's TPOT
+            # impact was priced by _chunk_qos_cap before admission
+            k = 0
+            lat = cm.mixed_round_latency(bs, ctx, chunk_tokens, chunk_ctx)
+            expected = cm.mixed_round_latency(bs, ctx, chunk_tokens,
+                                              chunk_ctx, noisy=False)
         else:
-            lat = cm.decode_solo(bs, ctx)
-            expected = cm.decode_solo(bs, ctx, noisy=False)
+            k = self._pick_k(self.t, bs, ctx)
+            if k > 0:
+                lat = cm.colocated_round(bs, ctx, k, sim.micro_batch,
+                                         sim.ft_seq)
+                expected = cm.colocated_round(bs, ctx, k, sim.micro_batch,
+                                              sim.ft_seq, noisy=False)
+            else:
+                lat = cm.decode_solo(bs, ctx)
+                expected = cm.decode_solo(bs, ctx, noisy=False)
         if sim.straggler_prob and self._rng.random() < sim.straggler_prob:
             lat *= float(self._rng.uniform(3.0, 8.0))   # injected fault
+        round_start = self.t
         self.t += lat
         self.rounds += 1
         self.bs_accum += bs
@@ -429,6 +611,10 @@ class DecodeInstanceSim:
             self.ft.advance(k, self.t)
         elif self.colocate:
             self.ft.pump_dma(self.t)
+        if chunk_tokens > 0:
+            self._apply_chunk(takes, round_start, self.t)
+            self.chunk_timeline.append((round_start, chunk_tokens,
+                                        self.chunk_budget))
         self.quantum_timeline.append((self.t, k, lat, bs))
         self.batch_timeline.append((self.t, bs))
         # ---- token bookkeeping ------------------------------------------

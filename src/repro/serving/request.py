@@ -23,6 +23,12 @@ class Request:
     # sticky-routing key (-1 = sessionless): requests sharing a session
     # benefit from prefix-cache reuse when routed to the same instance
     session_id: int = -1
+    # tokens of the prompt already resident in the target instance's prefix
+    # cache (core/prefix_cache.py): they need no prefill compute
+    cache_hit_tokens: int = 0
+    # chunked-prefill progress (prefill_mode="chunked"): effective prompt
+    # tokens already processed in decode-round chunks
+    prefilled_tokens: int = 0
     phase: Phase = Phase.QUEUED
     slot: int = -1                 # decode slot index (-1 = unassigned)
     generated: int = 0
@@ -35,6 +41,13 @@ class Request:
     @property
     def context_len(self) -> int:
         return self.prompt_len + self.generated
+
+    @property
+    def effective_prompt_len(self) -> int:
+        """Prompt tokens that actually need prefill compute: the prefix-cache
+        hit is already resident on the target instance. KV accounting still
+        charges the full prompt (the cached prefix occupies cache capacity)."""
+        return max(self.prompt_len - self.cache_hit_tokens, 1)
 
     def tpot_samples(self) -> List[float]:
         """Per-output-token latencies (decode QoS metric)."""

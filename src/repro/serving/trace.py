@@ -80,8 +80,9 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
 # Workload-shape presets for the cluster layer (core/cluster.py): same
 # generator, different envelope/burstiness/length mixes. Each models a
 # tenant class a MaaS fleet must absorb (steady API traffic, a daily cycle,
-# a flash crowd, agentic long-tail jobs).
-SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail")
+# a flash crowd, agentic long-tail jobs, chatbot sessions with shared
+# prompt prefixes).
+SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail", "session_heavy")
 
 
 def scenario_config(name: str, duration_s: float = 600.0,
@@ -105,6 +106,15 @@ def scenario_config(name: str, duration_s: float = 600.0,
         return TraceConfig(burstiness=0.2, rate_amplitude=0.3,
                            prompt_sigma=1.3, output_sigma=1.4,
                            output_max=2048, **base)
+    if name == "session_heavy":
+        # chatbot traffic: a small set of hot sessions keeps returning
+        # with near-identical long prompts (shared conversation history),
+        # the regime sticky routing + prefix caching targets. Low prompt
+        # sigma keeps per-session prompts close in length, so a cached
+        # prefix covers most of the next turn's prompt.
+        base["n_sessions"] = n_sessions if n_sessions > 0 else 12
+        return TraceConfig(burstiness=0.8, rate_amplitude=0.1,
+                           prompt_sigma=0.35, **base)
     raise ValueError(f"unknown scenario {name!r}; choose from {SCENARIOS}")
 
 

@@ -1,0 +1,306 @@
+"""Chunked-prefill deployment mode + session prefix cache (PR 4).
+
+Covers: request conservation per policy in chunked mode, the
+chunk-budget-never-exceeded invariant, the predictor's chunk pricing, the
+mode-aware autoscaler loop's budget bounds, prefix-cache LRU/capacity/
+allocator-charge behaviour, hit-rate determinism under a fixed seed, and
+the TTFT regressions — sticky sessions beat least_loaded on a
+session-heavy trace, and the cache-less PR 3 baseline is measurably worse
+at equal goodput."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSim, simulate_cluster
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.core.router import POLICIES, RouterConfig
+from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
+                                  SimConfig, fit_predictor)
+from repro.serving.trace import generate_scenario
+
+LLAMA = get_config("llama3-8b")
+
+
+def _chunked_cfg(policy="least_loaded", cache=None, **kw):
+    return ClusterConfig(n_initial=2, prefill_mode="chunked",
+                         router=RouterConfig(policy=policy),
+                         prefix_cache=cache, **kw)
+
+
+def _run(cluster, scenario="spike", duration=20.0, rps=8.0, sessions=0,
+         seed=2, mode="harli"):
+    reqs = generate_scenario(scenario, duration, rps, seed=seed - 1,
+                             n_sessions=sessions)
+    return simulate_cluster(LLAMA, LLAMA, reqs,
+                            SimConfig(mode=mode, seed=seed), cluster)
+
+
+# ------------------------------------------------------------ chunked mode --
+@pytest.mark.parametrize("policy", POLICIES)
+def test_chunked_conservation_per_policy(policy):
+    """Every request routed exactly once or rejected, with the prefill
+    stage living on the decode instances themselves."""
+    res = _run(_chunked_cfg(policy), duration=15.0, sessions=8)
+    s = res.stats
+    assert s.routed + s.rejected == s.offered
+    assert s.completed <= s.routed
+    assert s.completed > 0
+
+
+def test_chunked_has_no_prefill_tier():
+    res = _run(_chunked_cfg())
+    assert res.final_prefill == 0 and res.peak_prefill == 0
+    assert not res.prefill_timeline
+    assert not any(d.action in ("add_prefill", "remove_prefill")
+                   for d in res.decisions)
+    assert res.chunk_budget_timeline, "chunk budget trajectory missing"
+    assert res.final_chunk_budget >= ChunkedPrefillConfig().min_budget
+
+
+def test_chunk_budget_never_exceeded():
+    """Invariant: no round ever carries more chunk tokens than the budget
+    in force when it started (the budget may move between rounds under
+    autoscaler control)."""
+    duration = 30.0
+    reqs = generate_scenario("spike", duration, 10.0, seed=1)
+    cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=2),
+                    _chunked_cfg())
+    cs.run(reqs, duration)
+    rounds = 0
+    for inst in cs.router.all_instances():
+        for _, tokens, budget in inst.chunk_timeline:
+            assert 0 < tokens <= budget, (tokens, budget)
+            rounds += 1
+    assert rounds > 0, "no chunk rounds ran"
+
+
+def test_chunked_mixed_rounds_meet_tpot_slo_on_spike():
+    """Acceptance: mixing prefill chunks into decode rounds must keep the
+    QoS guarantee — per-request TPOT p99 stays under the SLO because the
+    predictor prices every chunk before admission."""
+    rcfg = RouterConfig()
+    res = _run(_chunked_cfg(), scenario="spike", duration=40.0, rps=10.0)
+    assert res.stats.completed > 0
+    assert res.stats.tpot_p99 <= rcfg.tpot_slo_s * rcfg.tpot_slack, \
+        res.stats.tpot_p99
+
+
+def test_chunked_deterministic():
+    a = _run(_chunked_cfg("session_affinity", PrefixCacheConfig()),
+             duration=15.0, sessions=8)
+    b = _run(_chunked_cfg("session_affinity", PrefixCacheConfig()),
+             duration=15.0, sessions=8)
+    assert a.stats == b.stats
+    assert a.chunk_budget_timeline == b.chunk_budget_timeline
+    assert (a.prefix_hits, a.prefix_misses, a.prefix_hit_tokens) == \
+        (b.prefix_hits, b.prefix_misses, b.prefix_hit_tokens)
+
+
+def test_chunked_separate_mode_without_predictor():
+    """separate mode fits no predictor: chunk admission must degrade to
+    the deterministic cost-model price check, not crash."""
+    res = _run(_chunked_cfg(), duration=15.0, mode="separate")
+    assert res.stats.completed > 0
+
+
+def test_mixed_round_latency_reduces_and_grows():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), noise_sigma=0)
+    base = cm.mixed_round_latency(16, 512, 0, noisy=False)
+    assert base == pytest.approx(
+        cm.colocated_round(16, 512, 0, 2, 1024, noisy=False))
+    prev = base
+    for ct in (64, 128, 256, 512):
+        lat = cm.mixed_round_latency(16, 512, ct, chunk_ctx=512,
+                                     noisy=False)
+        assert lat > prev, "chunk tokens must cost latency"
+        prev = lat
+    # a prefill-only round still pays the weight stream once
+    assert cm.mixed_round_latency(0, 0, 256, noisy=False) > 0
+
+
+def test_predictor_prices_chunks():
+    """max_chunk_tokens must be the inverse of predict_mixed at the limit:
+    the returned chunk is affordable, one step more is not."""
+    sim = SimConfig(mode="harli", seed=0)
+    pred, _ = fit_predictor(LLAMA, sim)
+    assert pred.mixed_coef is not None
+    assert pred.report.mixed_mean_err < 0.15
+    limit = 0.040
+    for bs in (4, 16, 64):
+        cap = pred.max_chunk_tokens(0.0, bs, 512, limit, 4096)
+        if cap <= 0:
+            continue
+        assert pred.predict_mixed(0.0, bs, 512, cap) <= limit * 1.001
+        if cap < 4096:
+            assert pred.predict_mixed(0.0, bs, 512, cap + 64) > limit
+
+
+def test_autoscaler_chunk_budget_stays_in_bounds():
+    a = Autoscaler(AutoscalerConfig(prefill_cooldown_ticks=0))
+    lo, hi = 64, 1024
+    budget = 256
+    # sustained TTFT pressure grows to the cap, then escalates to fleet
+    for t in range(10):
+        d = a.evaluate_chunked(float(t), wait_p99=10.0, viol_frac=0.0,
+                               budget=budget, lo=lo, hi=hi, n_serving=2)
+        if d.action == "grow_chunk_budget":
+            assert lo <= d.target <= hi
+            budget = d.target
+    assert budget == hi
+    d = a.evaluate_chunked(99.0, wait_p99=10.0, viol_frac=0.0,
+                           budget=budget, lo=lo, hi=hi, n_serving=2)
+    assert d.action == "add_instance"
+    # TTFT comfortable + TPOT pressure shrinks, never below the floor
+    budget = 128
+    for t in range(10):
+        d = a.evaluate_chunked(100.0 + t, wait_p99=0.0, viol_frac=0.5,
+                               budget=budget, lo=lo, hi=hi, n_serving=2)
+        if d.action == "shrink_chunk_budget":
+            assert lo <= d.target <= hi
+            budget = d.target
+    assert budget == lo
+
+
+# ------------------------------------------------------------ prefix cache --
+def _alloc(total_gb=8):
+    return UnifiedAllocator(AllocatorConfig(
+        total_bytes=total_gb * 2 ** 30, n_layers=32,
+        kv_bytes_per_token=131072, max_bs=64, qos_s=0.04,
+        swap_time_s=0.002))
+
+
+def test_prefix_cache_charges_allocator_pool():
+    alloc = _alloc()
+    free0 = alloc.free_chunks
+    cache = PrefixCache(PrefixCacheConfig(chunks=4), alloc)
+    assert cache.granted_chunks == 4
+    assert alloc.free_chunks == free0 - 4
+    assert cache.capacity_tokens == 4 * alloc.tokens_per_chunk
+    alloc.check_invariants()
+    # an absurd ask is clamped to the reusable pool minus the reserve
+    big = PrefixCache(PrefixCacheConfig(chunks=10 ** 6), alloc)
+    assert big.granted_chunks <= alloc.total_chunks
+    alloc.check_invariants()
+
+
+def test_prefix_cache_lru_eviction_and_hits():
+    alloc = _alloc()
+    cache = PrefixCache(PrefixCacheConfig(chunks=1, min_hit_tokens=8),
+                        alloc)
+    cap = cache.capacity_tokens
+    seg = cap // 2
+    cache.insert(1, seg)
+    cache.insert(2, seg)
+    assert cache.lookup(1, seg + 1) == seg           # both resident
+    cache.insert(3, seg)                             # evicts LRU == 2
+    assert cache.lookup(2, seg + 1) == 0
+    assert cache.lookup(1, seg + 1) == seg           # 1 was refreshed
+    # hit never covers the full prompt (the new turn must prefill)
+    assert cache.lookup(1, seg) == seg - 1
+    # tiny hits are ignored
+    assert cache.lookup(3, 4) == 0
+    cache.check_invariants()
+    assert cache.stats.evictions == 1
+
+
+def test_prefix_cache_hit_rate_deterministic():
+    """Fixed seed -> identical hit/miss/saved-token counters, run to run
+    (the cache must not introduce any ordering or RNG dependence)."""
+    def go():
+        duration = 25.0
+        reqs = generate_scenario("session_heavy", duration, 10.0, seed=1)
+        cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=2),
+                        ClusterConfig(
+                            n_initial=2,
+                            router=RouterConfig(policy="session_affinity"),
+                            prefix_cache=PrefixCacheConfig()))
+        cs.run(reqs, duration)
+        stats = [(i.inst_id, i.prefix_cache.stats.hits,
+                  i.prefix_cache.stats.misses,
+                  i.prefix_cache.stats.hit_tokens,
+                  i.prefix_cache.stats.evictions)
+                 for i in cs.router.all_instances()
+                 if i.prefix_cache is not None]
+        return sorted(stats)
+    a, b = go(), go()
+    assert a == b
+    assert sum(h for _, h, *_ in a) > 0, "no hits on a session-heavy trace"
+
+
+def test_prefix_cache_shrinks_kv_budget():
+    sim = SimConfig(mode="harli", seed=0)
+    plain = DecodeInstanceSim(0, LLAMA, None, sim, None, 0)
+    cached = DecodeInstanceSim(1, LLAMA, None, sim, None, 1,
+                               prefix_cache=PrefixCacheConfig(chunks=8))
+    assert cached.prefix_cache.granted_chunks == 8
+    assert cached.kv_budget_chunks == plain.kv_budget_chunks - 8
+
+
+def test_sessionless_trace_untouched_by_cache():
+    """With no session ids the cache is inert: enabling it must not change
+    completion accounting (capacity is reserved but never hit)."""
+    on = _run(_chunked_cfg(cache=PrefixCacheConfig()), duration=15.0)
+    assert on.prefix_hits == 0 and on.prefix_misses == 0
+    assert on.stats.completed > 0
+
+
+# ------------------------------------------------- TTFT regressions (PR 4) --
+def _session_run(policy, cache, seed=2):
+    duration, rps = 40.0, 12.0
+    reqs = generate_scenario("session_heavy", duration, rps, seed=1,
+                             n_sessions=48)
+    return simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=seed),
+        ClusterConfig(n_initial=3, autoscale=False,
+                      prefill=PrefillPoolConfig(),
+                      router=RouterConfig(policy=policy),
+                      prefix_cache=cache))
+
+
+def test_sticky_sessions_beat_least_loaded_ttft_p99():
+    """Acceptance: with the prefix cache on, session_affinity converts
+    placement stability into TTFT — strictly better p99 than least_loaded
+    on a session-heavy trace at equal goodput."""
+    sticky = _session_run("session_affinity", PrefixCacheConfig(chunks=8))
+    spread = _session_run("least_loaded", PrefixCacheConfig(chunks=8))
+    assert sticky.prefix_hits > 0
+    assert sticky.stats.ttft_p99 < spread.stats.ttft_p99, \
+        (sticky.stats.ttft_p99, spread.stats.ttft_p99)
+    assert sticky.stats.goodput >= spread.stats.goodput
+
+
+def test_prefix_cache_beats_cacheless_baseline_ttft_p99():
+    """Acceptance: session_affinity + cache improves TTFT p99 measurably
+    over the cache-less PR 3 baseline at equal goodput."""
+    cached = _session_run("session_affinity", PrefixCacheConfig(chunks=8))
+    bare = _session_run("session_affinity", None)
+    assert cached.stats.ttft_p99 < 0.9 * bare.stats.ttft_p99, \
+        (cached.stats.ttft_p99, bare.stats.ttft_p99)
+    assert cached.stats.goodput >= bare.stats.goodput
+
+
+def test_pooled_affinity_pins_sticky_instance():
+    """In pooled mode the sticky instance is chosen at admission (so the
+    cache can shorten prefill) and honored at hand-off: a session's
+    completed requests land on one instance while it has headroom."""
+    duration = 20.0
+    reqs = generate_scenario("session_heavy", duration, 6.0, seed=1,
+                             n_sessions=6)
+    cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=2),
+                    ClusterConfig(n_initial=2, autoscale=False,
+                                  prefill=PrefillPoolConfig(),
+                                  router=RouterConfig(
+                                      policy="session_affinity"),
+                                  prefix_cache=PrefixCacheConfig()))
+    cs.run(reqs, duration)
+    placed = {}
+    for inst in cs.router.all_instances():
+        for r in inst.all_reqs:
+            placed.setdefault(r.session_id, set()).add(inst.inst_id)
+    multi = [s for s, insts in placed.items() if len(insts) > 1]
+    # light load: sessions stay pinned (overflow would need load > 1.0)
+    assert not multi, f"sessions split across instances: {multi}"
