@@ -280,19 +280,21 @@ def sec88_overhead():
 # Beyond-paper: cluster goodput under the two-tier routing plane
 # (core/cluster.py) across the multi-tenant scenario presets. Goodput is
 # DistServe's SLO-attaining throughput; harli must hold it while adding
-# finetune throughput the separate fleet can't match.
+# finetune throughput the separate fleet can't match. Spec-driven: the
+# whole experiment is one ExperimentSpec (repro.core.api), same entry
+# point examples/cluster_sim.py --spec uses.
 def cluster_goodput(duration_s: float = 90.0):
-    from repro.core.cluster import ClusterConfig, simulate_cluster
-    from repro.serving.trace import generate_scenario
+    from repro.core.api import ExperimentSpec
+    from repro.core.cluster import ClusterConfig
 
     for scen in ("steady", "spike"):
+        spec = ExperimentSpec(
+            name=f"cluster_goodput_{scen}", scenario=scen,
+            duration_s=duration_s, mean_rps=10.0, seed=20,
+            sim=SimConfig(seed=22), cluster=ClusterConfig(n_initial=2))
         for mode in ("separate", "harli"):
-            reqs = generate_scenario(scen, duration_s, mean_rps=10.0,
-                                     seed=21)
             t0 = time.time()
-            res = simulate_cluster(LLAMA, LLAMA, reqs,
-                                   SimConfig(mode=mode, seed=22),
-                                   ClusterConfig(n_initial=2))
+            res = spec.with_mode(mode).run()
             s = res.stats
             _row(f"cluster_goodput,{scen},{mode}",
                  (time.time() - t0) * 1e6,
@@ -310,22 +312,23 @@ def cluster_goodput(duration_s: float = 90.0):
 def cluster_fleet_timeline(duration_s: float = 90.0):
     import os
 
+    from repro.core.api import ExperimentSpec
     from repro.core.cluster import ClusterConfig, ClusterSim
     from repro.core.router import RouterConfig, request_slo
-    from repro.core.simulator import SimConfig
-    from repro.serving.trace import generate_scenario
 
     win = max(duration_s / 18.0, 2.5)       # goodput window (s)
+    base = ExperimentSpec(
+        name="cluster_fleet_timeline", scenario="spike",
+        duration_s=duration_s, mean_rps=10.0, seed=30,
+        sim=SimConfig(seed=32),
+        cluster=ClusterConfig(
+            n_initial=2,
+            router=RouterConfig(policy="predicted_latency")))
     series = {}
     for mode in ("separate", "harli"):
-        reqs = generate_scenario("spike", duration_s, mean_rps=10.0,
-                                 seed=31)
-        cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode=mode, seed=32),
-                        ClusterConfig(
-                            n_initial=2,
-                            router=RouterConfig(
-                                policy="predicted_latency")))
-        res = cs.run(reqs, duration_s)
+        spec = base.with_mode(mode)
+        cs = ClusterSim(LLAMA, LLAMA, spec.sim, spec.cluster)
+        res = cs.run(spec.requests(), duration_s)
         finishes = []
         for inst in cs.router.all_instances():
             for r in inst.all_reqs:
@@ -423,10 +426,10 @@ def cluster_fleet_timeline(duration_s: float = 90.0):
 def cluster_prefill_modes(duration_s: float = 90.0):
     import os
 
-    from repro.core.cluster import ClusterConfig, simulate_cluster
+    from repro.core.api import ExperimentSpec
+    from repro.core.cluster import ClusterConfig
     from repro.core.prefill_pool import PrefillPoolConfig
     from repro.core.router import RouterConfig
-    from repro.serving.trace import generate_scenario
 
     rcfg = RouterConfig()
     tpot_limit_ms = rcfg.tpot_slo_s * rcfg.tpot_slack * 1e3
@@ -434,7 +437,7 @@ def cluster_prefill_modes(duration_s: float = 90.0):
         "chained": dict(prefill_mode="chained", prefill=None),
         "pooled": dict(prefill_mode="pooled",
                        prefill=PrefillPoolConfig()),
-        "chunked": dict(prefill_mode="chunked"),
+        "chunked": dict(prefill_mode="chunked", prefill=None),
     }
     # prefill-side hardware peak per mode: pool workers (pooled), one
     # implicit serialized-prefill partner per peak instance (chained),
@@ -446,12 +449,11 @@ def cluster_prefill_modes(duration_s: float = 90.0):
 
     out = {}
     for name, kw in modes.items():
-        reqs = generate_scenario("spike", duration_s, mean_rps=10.0,
-                                 seed=41)
-        res = simulate_cluster(LLAMA, LLAMA, reqs,
-                               SimConfig(mode="harli", seed=42),
-                               ClusterConfig(n_initial=2, router=rcfg,
-                                             **kw))
+        res = ExperimentSpec(
+            name=f"cluster_prefill_modes_{name}", scenario="spike",
+            duration_s=duration_s, mean_rps=10.0, seed=40,
+            sim=SimConfig(mode="harli", seed=42),
+            cluster=ClusterConfig(n_initial=2, router=rcfg, **kw)).run()
         out[name] = res
         s = res.stats
         pf = prefill_peak(name, res)
@@ -523,9 +525,52 @@ def cluster_prefill_modes(duration_s: float = 90.0):
     _row("cluster_prefill_modes.png", 0, path)
 
 
+# Beyond-paper: cache-aware routing (the control-plane API's registered
+# plugin, core/policies/cache_aware.py) vs session_affinity vs
+# least_loaded on the session_heavy scenario — the config pinned in
+# examples/specs/session_heavy_cache_aware.json. cache_aware must beat
+# session_affinity on TTFT p99 at equal goodput: the sticky map is
+# load-blind (hot sessions pile onto one instance until the overflow
+# cliff), while the plugin reads every instance's PrefixCache and trades
+# cached-prefix savings against queue depth continuously.
+def cluster_cache_aware(duration_s: float = 60.0):
+    import dataclasses
+    import os
+
+    from repro.core.api import ExperimentSpec
+
+    spec = ExperimentSpec.load(os.path.join(
+        os.path.dirname(__file__), "..", "examples", "specs",
+        "session_heavy_cache_aware.json"))
+    spec = dataclasses.replace(spec, duration_s=duration_s)
+    out = {}
+    for policy in ("least_loaded", "session_affinity", "cache_aware"):
+        run = dataclasses.replace(
+            spec, cluster=dataclasses.replace(
+                spec.cluster, router=dataclasses.replace(
+                    spec.cluster.router, policy=policy)))
+        t0 = time.time()
+        res = run.run()
+        out[policy] = res
+        s = res.stats
+        tot = max(res.prefix_hits + res.prefix_misses, 1)
+        _row(f"cluster_cache_aware,{policy}", (time.time() - t0) * 1e6,
+             f"ttft_p99={s.ttft_p99:.3f}|goodput={s.goodput:.2f}"
+             f"|attain={s.slo_attainment:.3f}"
+             f"|hits={res.prefix_hits}|hit_rate={res.prefix_hits/tot:.3f}"
+             f"|hit_tokens={res.prefix_hit_tokens}")
+    aware, sticky = out["cache_aware"].stats, out["session_affinity"].stats
+    _row("cluster_cache_aware.summary", 0,
+         f"aware_vs_sticky_ttft_p99="
+         f"{aware.ttft_p99/max(sticky.ttft_p99, 1e-9):.2f}x"
+         f"|goodput_ratio={aware.goodput/max(sticky.goodput, 1e-9):.2f}x"
+         f"|win={int(aware.ttft_p99 < sticky.ttft_p99 and aware.goodput >= sticky.goodput)}")
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
-       cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes]
+       cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes,
+       cluster_cache_aware]

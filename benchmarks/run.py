@@ -33,7 +33,8 @@ def main() -> None:
                        "sec87_tp_mode": 45.0,
                        "cluster_goodput": 40.0,
                        "cluster_fleet_timeline": 40.0,
-                       "cluster_prefill_modes": 40.0}
+                       "cluster_prefill_modes": 40.0,
+                       "cluster_cache_aware": 40.0}
     for fn in F.ALL:
         if args.only and args.only not in fn.__name__:
             continue

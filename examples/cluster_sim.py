@@ -9,111 +9,233 @@ throughput), QoS attainment and finetune throughput.
         [--prefill-workers 2] [--chunk-budget 256] [--sessions 32] \
         [--prefix-cache-chunks 16] [--no-autoscale]
 
+or rerun a saved experiment exactly:
+
+    PYTHONPATH=src python examples/cluster_sim.py \
+        --spec examples/specs/spike_pooled.json
+
+Everything goes through ``ExperimentSpec`` (repro.core.api): the CLI
+flags build a spec, ``--spec file.json`` loads one, and either way
+``spec.validate()`` rejects contradictory combinations (a chunk budget
+in pooled mode, pool workers in chained mode, unknown policy names) with
+the fix in the error message instead of silently ignoring the knob.
+``--dump-spec out.json`` writes the flags back out as a spec file.
+
 Three deployment modes (docs/cluster.md):
   * ``--prefill-mode chained``  — PR 1's per-instance serialized prefill
   * ``--prefill-mode pooled``   — disaggregated prefill pool (default)
   * ``--prefill-mode chunked``  — prefill chunks mixed into decode rounds
-    under a QoS-priced per-round token budget (no prefill tier at all)
+    under a QoS-priced per-round token budget (no prefill tier at all);
+    ``--fuse-quantum`` additionally lets chunk-carrying rounds run a
+    reduced finetune quantum when the predictor prices both as fitting
 
 ``--prefill-workers 0`` still selects chained mode for backward
-compatibility. With ``--sessions > 0`` every serving instance gets a
-session prefix cache, so sticky routing (``--policy session_affinity``)
+compatibility. ``--policy`` accepts any registered routing policy —
+including plugins like ``cache_aware`` — via the control-plane registry.
+With ``--sessions > 0`` every serving instance gets a session prefix
+cache, so cache-aware routing (``session_affinity`` / ``cache_aware``)
 shortens effective prefill on hits; ``--prefix-cache-chunks 0`` disables
 it (the PR 3 cache-less baseline).
 """
 
 import argparse
+import dataclasses
 
-from repro.configs import get_config
+from repro.core.api import (ExperimentSpec, SpecError, available_policies,
+                            resolve_policy)
 from repro.core.autoscaler import AutoscalerConfig
-from repro.core.cluster import ClusterConfig, simulate_cluster
+from repro.core.cluster import ClusterConfig
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
-from repro.core.router import PREFILL_MODES, POLICIES, RouterConfig
+from repro.core.router import RouterConfig
 from repro.core.simulator import ChunkedPrefillConfig, SimConfig
-from repro.serving.trace import SCENARIOS, generate_scenario, peak_rps
+from repro.serving.trace import SCENARIOS, peak_rps
+
+
+def build_spec(args, ap) -> ExperimentSpec:
+    """Translate CLI flags into an ExperimentSpec, erroring loudly on
+    contradictory combinations. Mode-gated flags default to None so an
+    *explicit* flag is detectable even when its value equals the config
+    default (--prefill-workers 2 with chained mode must error, not
+    silently match PrefillPoolConfig()); ExperimentSpec.validate() stays
+    the deeper net for spec files."""
+    sessions_explicit = args.sessions is not None
+    for name, default in CLI_DEFAULTS.items():
+        if getattr(args, name) is None:
+            setattr(args, name, default)
+    n_sessions = args.sessions
+    policy_cls = resolve_policy("routing", args.policy)
+    if n_sessions == 0 and not sessions_explicit \
+            and getattr(policy_cls, "needs_sessions", False):
+        # session-keyed policies (declared via RoutingPolicy.
+        # needs_sessions, plugins included) get sessions by default; an
+        # explicit --sessions 0 stays 0 — the user asked for the
+        # sessionless baseline
+        n_sessions = 32
+    mode = args.prefill_mode
+    workers = args.prefill_workers
+    if mode is None:
+        mode = "chained" if workers is not None and workers <= 0 \
+            else "pooled"
+    if mode == "pooled":
+        if workers is not None and workers <= 0:
+            ap.error("--prefill-mode pooled needs --prefill-workers >= 1 "
+                     "(0 selects chained mode)")
+        prefill = PrefillPoolConfig(
+            n_workers=workers if workers is not None else 2,
+            ordering=args.prefill_ordering or "edf")
+    else:
+        if workers is not None and workers > 0:
+            ap.error(f"--prefill-workers only applies to --prefill-mode "
+                     f"pooled (mode is {mode!r}; 0 selects chained)")
+        if args.prefill_ordering is not None:
+            ap.error(f"--prefill-ordering only applies to --prefill-mode "
+                     f"pooled (mode is {mode!r})")
+        prefill = None
+    if mode != "chunked":
+        if args.chunk_budget is not None:
+            ap.error(f"--chunk-budget only applies to --prefill-mode "
+                     f"chunked (mode is {mode!r})")
+        if args.fuse_quantum:
+            ap.error(f"--fuse-quantum only applies to --prefill-mode "
+                     f"chunked (mode is {mode!r})")
+    chunked = ChunkedPrefillConfig(
+        budget_tokens=args.chunk_budget if args.chunk_budget is not None
+        else 256,
+        fuse_quantum=args.fuse_quantum)
+    cache = PrefixCacheConfig(chunks=args.prefix_cache_chunks) \
+        if n_sessions > 0 and args.prefix_cache_chunks > 0 else None
+    return ExperimentSpec(
+        name=f"{args.scenario}_{mode}_{args.policy}",
+        inf_model=args.inf, ft_model=args.ft,
+        scenario=args.scenario, duration_s=args.duration,
+        mean_rps=args.rps, n_sessions=n_sessions, seed=args.seed,
+        sim=SimConfig(mode="harli", qos_s=args.qos_ms / 1e3,
+                      seed=args.seed + 2),
+        cluster=ClusterConfig(
+            n_initial=args.instances,
+            autoscale=not args.no_autoscale,
+            prefill_mode=mode,
+            prefill=prefill,
+            chunked=chunked,
+            prefix_cache=cache,
+            router=RouterConfig(policy=args.policy,
+                                ttft_slo_s=args.ttft_slo,
+                                tpot_slo_s=args.qos_ms / 1e3),
+            autoscaler=AutoscalerConfig()))
+
+
+def describe(spec: ExperimentSpec) -> str:
+    cl = spec.cluster
+    mode = cl.resolved_mode()
+    if mode == "pooled":
+        p = cl.prefill or PrefillPoolConfig()
+        return f"pool({p.n_workers},{p.ordering})"
+    if mode == "chunked":
+        fused = "+fused-quantum" if cl.chunked.fuse_quantum else ""
+        return f"chunked(budget={cl.chunked.budget_tokens}{fused})"
+    return "per-instance chain"
+
+
+CLI_DEFAULTS = dict(scenario="spike", duration=60.0, rps=10.0,
+                    instances=2, policy="least_loaded", sessions=0,
+                    prefix_cache_chunks=16, inf="llama3-8b",
+                    ft="llama3-8b", qos_ms=40.0, ttft_slo=4.0, seed=0)
 
 
 def main():
+    # experiment-shaping flags default to None (filled from CLI_DEFAULTS
+    # in build_spec) so --spec can reject any explicit one: a spec file
+    # runs as-is, and silently dropping a flag next to it would be the
+    # ignored-knob bug class this PR removes
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", default="spike", choices=SCENARIOS)
-    ap.add_argument("--duration", type=float, default=60.0)
-    ap.add_argument("--rps", type=float, default=10.0)
-    ap.add_argument("--instances", type=int, default=2)
-    ap.add_argument("--policy", default="least_loaded", choices=POLICIES)
-    ap.add_argument("--prefill-mode", default=None, choices=PREFILL_MODES,
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="run a saved ExperimentSpec JSON as-is (combine "
+                         "only with --dump-spec; other flags error)")
+    ap.add_argument("--dump-spec", default=None, metavar="FILE",
+                    help="write the flag-built spec to FILE and exit")
+    ap.add_argument("--scenario", default=None, choices=SCENARIOS)
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--rps", type=float, default=None)
+    ap.add_argument("--instances", type=int, default=None)
+    ap.add_argument("--policy", default=None,
+                    choices=available_policies("routing"))
+    ap.add_argument("--prefill-mode", default=None,
+                    choices=available_policies("prefill"),
                     help="deployment mode; default derives from "
                          "--prefill-workers (0 = chained, else pooled)")
-    ap.add_argument("--prefill-workers", type=int, default=2,
-                    help="initial prefill-pool size (pooled mode); 0 = "
-                         "chained mode")
-    ap.add_argument("--prefill-ordering", default="edf",
+    ap.add_argument("--prefill-workers", type=int, default=None,
+                    help="initial prefill-pool size (pooled mode, default "
+                         "2); 0 = chained mode")
+    ap.add_argument("--prefill-ordering", default=None,
                     choices=("edf", "fifo"))
-    ap.add_argument("--chunk-budget", type=int, default=256,
+    ap.add_argument("--chunk-budget", type=int, default=None,
                     help="initial per-round prefill token budget "
                          "(chunked mode)")
-    ap.add_argument("--sessions", type=int, default=0,
-                    help="sticky sessions in the trace (session_affinity)")
-    ap.add_argument("--prefix-cache-chunks", type=int, default=16,
+    ap.add_argument("--fuse-quantum", action="store_true",
+                    help="chunked mode: fuse a reduced finetune quantum "
+                         "into chunk-carrying rounds when the predictor "
+                         "prices both as fitting the round budget")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="sticky sessions in the trace "
+                         "(session_affinity / cache_aware)")
+    ap.add_argument("--prefix-cache-chunks", type=int, default=None,
                     help="per-instance session prefix cache capacity in "
                          "allocator chunks; 0 disables the cache")
-    ap.add_argument("--inf", default="llama3-8b")
-    ap.add_argument("--ft", default="llama3-8b")
-    ap.add_argument("--qos-ms", type=float, default=40.0)
-    ap.add_argument("--ttft-slo", type=float, default=4.0)
+    ap.add_argument("--inf", default=None)
+    ap.add_argument("--ft", default=None)
+    ap.add_argument("--qos-ms", type=float, default=None)
+    ap.add_argument("--ttft-slo", type=float, default=None)
     ap.add_argument("--no-autoscale", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args()
 
-    cfg_i, cfg_f = get_config(args.inf), get_config(args.ft)
-    n_sessions = args.sessions
-    if args.policy == "session_affinity" and n_sessions == 0:
-        n_sessions = 32          # affinity needs sessions to stick to
-    mode = args.prefill_mode
-    if mode is None:
-        mode = "chained" if args.prefill_workers <= 0 else "pooled"
-    elif mode == "pooled" and args.prefill_workers <= 0:
-        ap.error("--prefill-mode pooled needs --prefill-workers >= 1 "
-                 "(0 selects chained mode)")
-    prefill = PrefillPoolConfig(
-        n_workers=args.prefill_workers,
-        ordering=args.prefill_ordering) if mode == "pooled" else None
-    cache = PrefixCacheConfig(chunks=args.prefix_cache_chunks) \
-        if n_sessions > 0 and args.prefix_cache_chunks > 0 else None
-    tier = {"pooled": f"pool({args.prefill_workers},"
-                      f"{args.prefill_ordering})",
-            "chained": "per-instance chain",
-            "chunked": f"chunked(budget={args.chunk_budget})"}[mode]
-    probe = generate_scenario(args.scenario, args.duration, args.rps,
-                              seed=args.seed + 1, n_sessions=n_sessions)
-    print(f"scenario={args.scenario}: {len(probe)} requests over "
-          f"{args.duration:.0f}s (mean {len(probe)/args.duration:.1f} rps, "
-          f"peak {peak_rps(probe):.1f} rps)  fleet_0={args.instances}  "
-          f"policy={args.policy}  prefill={tier}  "
-          f"prefix_cache={'on' if cache else 'off'}  "
-          f"autoscale={not args.no_autoscale}")
-    print(f"SLOs: TTFT<={args.ttft_slo:.1f}s TPOT<={args.qos_ms:.0f}ms\n")
+    if args.spec is not None:
+        explicit = [f"--{n.replace('_', '-')}" for n in
+                    list(CLI_DEFAULTS) + ["prefill_mode",
+                                          "prefill_workers",
+                                          "prefill_ordering",
+                                          "chunk_budget"]
+                    if getattr(args, n) is not None]
+        explicit += [f"--{n.replace('_', '-')}" for n in
+                     ("fuse_quantum", "no_autoscale") if getattr(args, n)]
+        if explicit:
+            ap.error(f"--spec runs the file as-is; drop "
+                     f"{', '.join(explicit)} (edit the spec instead, or "
+                     "build one from flags with --dump-spec)")
+        try:
+            spec = ExperimentSpec.load(args.spec)
+            spec.validate()
+        except (OSError, SpecError) as e:
+            ap.error(str(e))
+    else:
+        spec = build_spec(args, ap)
+        try:
+            spec.validate()
+        except SpecError as e:
+            ap.error(str(e))
+    if args.dump_spec is not None:
+        spec.save(args.dump_spec)
+        print(f"spec written to {args.dump_spec}")
+        return
 
+    cl = spec.cluster
+    cache = cl.prefix_cache
+    probe = spec.requests()
+    print(f"spec={spec.name}  scenario={spec.scenario}: {len(probe)} "
+          f"requests over {spec.duration_s:.0f}s "
+          f"(mean {len(probe)/spec.duration_s:.1f} rps, "
+          f"peak {peak_rps(probe):.1f} rps)  fleet_0={cl.n_initial}  "
+          f"policy={cl.router.policy}  prefill={describe(spec)}  "
+          f"prefix_cache={'on' if cache else 'off'}  "
+          f"autoscale={cl.autoscale}")
+    print(f"SLOs: TTFT<={cl.router.ttft_slo_s:.1f}s "
+          f"TPOT<={cl.router.tpot_slo_s*1e3:.0f}ms\n")
+
+    mode = cl.resolved_mode()
     out = {}
     for sim_mode in ("separate", "harli"):
-        reqs = generate_scenario(args.scenario, args.duration, args.rps,
-                                 seed=args.seed + 1, n_sessions=n_sessions)
-        res = simulate_cluster(
-            cfg_i, cfg_f, reqs,
-            SimConfig(mode=sim_mode, qos_s=args.qos_ms / 1e3,
-                      seed=args.seed + 2),
-            ClusterConfig(
-                n_initial=args.instances,
-                autoscale=not args.no_autoscale,
-                prefill_mode=mode,
-                prefill=prefill,
-                chunked=ChunkedPrefillConfig(
-                    budget_tokens=args.chunk_budget),
-                prefix_cache=cache,
-                router=RouterConfig(policy=args.policy,
-                                    ttft_slo_s=args.ttft_slo,
-                                    tpot_slo_s=args.qos_ms / 1e3),
-                autoscaler=AutoscalerConfig()))
+        res = spec.with_mode(sim_mode).run()
         out[sim_mode] = res
         s = res.stats
         acts = [d for d in res.decisions if d.action != "none"]

@@ -17,29 +17,30 @@ reconfiguration). Actions:
   * ``none``
 
 A second, independent control loop (``evaluate_prefill``) sizes the
-disaggregated prefill pool (core/prefill_pool.py): grow on TTFT headroom
-loss or queue depth, shrink on deep idle, and never below a floor that is
-*coordinated* with the decode loop — ``prefill_per_decode`` workers per
-serving instance — so the two tiers move together when the fleet scales.
-Actions: ``add_prefill`` / ``remove_prefill``, logged in the same decision
-stream. The loop is *mode-aware*: in chunked deployments
-(prefill_mode="chunked", core/cluster.py) there is no pool to size, so the
-same control slot runs ``evaluate_chunked`` instead and tunes the fleet's
-per-round prefill chunk budget against TTFT headroom
-(``grow_chunk_budget`` / ``shrink_chunk_budget``).
+disaggregated prefill pool (core/prefill_pool.py); its chunked-mode
+variant (``evaluate_chunked``) tunes the fleet-wide per-round chunk budget
+instead (``grow_chunk_budget`` / ``shrink_chunk_budget``) — which loop
+runs is the prefill placement's call (core/policies/placement.py).
 
-The controller is pure policy: it never touches instances itself, the
+This class is **mechanism only**: cooldown bookkeeping and the decision
+log. The decisions themselves are ``ScalingPolicy`` classes resolved by
+name through the control-plane registry (core/api.py; built-ins in
+core/policies/scaling.py) — ``AutoscalerConfig.decode_policy`` /
+``prefill_policy`` / ``chunk_policy`` select them, so a new scaling
+strategy (model-predictive, deadline-aware, ...) is a registered plugin,
+not an edit here. The controller never touches instances itself; the
 cluster event loop (core/cluster.py) applies decisions. That keeps the
-invariants testable — e.g. it can never emit ``remove_instance`` or
-``to_finetune`` when doing so would leave fewer than ``min_decode``
-serving instances.
+invariants testable — e.g. the built-in decode policy can never emit
+``remove_instance`` or ``to_finetune`` when doing so would leave fewer
+than ``min_decode`` serving instances.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional
+from typing import Dict, List
+
+from repro.core import api
 
 ACTIONS = ("none", "add_instance", "remove_instance",
            "to_decode", "to_colocated", "to_finetune",
@@ -74,6 +75,10 @@ class AutoscalerConfig:
     # budget instead — grow when TTFT headroom erodes, give the tokens
     # back to decode/finetune when TTFT is comfortable but TPOT is not
     chunk_step_tokens: int = 64      # budget delta per action
+    # ---- registered ScalingPolicy names, one per control loop
+    decode_policy: str = "decode_fleet"
+    prefill_policy: str = "pooled_prefill"
+    chunk_policy: str = "chunked_budget"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,75 +106,28 @@ class Autoscaler:
         self.decisions: List[ScaleDecision] = []
         self._cooldown = 0
         self._prefill_cooldown = 0
+        self._policies: Dict[str, api.ScalingPolicy] = {}
         self.prefill_ttft_slo_s = 4.0   # set by the cluster (RouterConfig)
 
-    # ------------------------------------------------------------ policy --
-    def _decide(self, t: float, snaps: List[InstanceSnapshot],
-                viol_frac: float, ft_backlog: float) -> ScaleDecision:
-        cfg = self.cfg
-        serving = [s for s in snaps if s.role != "finetune"
-                   and not s.draining]
-        n_serving = len(serving)
-        mean_load = (sum(s.load for s in serving) / n_serving) \
-            if n_serving else 1.0
-        colocated = [s for s in serving if s.role == "colocated"]
-        paused = [s for s in serving if s.role == "decode" and s.colocatable]
-        dedicated = [s for s in snaps if s.role == "finetune"
-                     and s.colocatable and s.can_serve and not s.draining]
+    def _policy(self, name: str) -> api.ScalingPolicy:
+        inst = self._policies.get(name)
+        if inst is None:
+            inst = self._policies[name] = \
+                api.resolve_policy("scaling", name)()
+        return inst
 
-        # --- QoS pressure: shed finetune first, then grow the fleet ------
-        if viol_frac > cfg.viol_frac_shed:
-            if colocated:
-                victim = max(colocated, key=lambda s: (s.load, s.inst_id))
-                return ScaleDecision(t, "to_decode", victim.inst_id,
-                                     f"viol={viol_frac:.3f}")
-            if n_serving < cfg.max_decode:
-                return ScaleDecision(t, "add_instance",
-                                     reason=f"viol={viol_frac:.3f}")
-            return ScaleDecision(t, "none", reason="at max_decode")
-        if mean_load > cfg.scale_up_load:
-            if n_serving < cfg.max_decode:
-                return ScaleDecision(t, "add_instance",
-                                     reason=f"load={mean_load:.2f}")
-            if colocated:
-                victim = max(colocated, key=lambda s: (s.load, s.inst_id))
-                return ScaleDecision(t, "to_decode", victim.inst_id,
-                                     f"load={mean_load:.2f} at max_decode")
-            return ScaleDecision(t, "none", reason="at max_decode")
-
-        # --- headroom: give capacity back to finetune --------------------
-        if viol_frac < cfg.viol_frac_resume and ft_backlog > 0:
-            if paused:
-                pick = min(paused, key=lambda s: (s.load, s.inst_id))
-                return ScaleDecision(t, "to_colocated", pick.inst_id,
-                                     f"backlog={ft_backlog:.1f}")
-            idle = [s for s in colocated
-                    if s.load <= cfg.idle_load_ft and s.active == 0]
-            if idle and n_serving > cfg.min_decode:
-                pick = min(idle, key=lambda s: (s.load, s.inst_id))
-                return ScaleDecision(t, "to_finetune", pick.inst_id,
-                                     f"backlog={ft_backlog:.1f} idle fleet")
-
-        # --- sustained low load: shrink ----------------------------------
-        if mean_load < cfg.scale_down_load and n_serving > cfg.min_decode:
-            pick = min(serving, key=lambda s: (s.load, s.inst_id))
-            return ScaleDecision(t, "remove_instance", pick.inst_id,
-                                 f"load={mean_load:.2f}")
-        # finetune-dedicated instances rejoin serving when load recovers
-        if dedicated and mean_load > 2 * cfg.scale_down_load:
-            pick = min(dedicated, key=lambda s: s.inst_id)
-            return ScaleDecision(t, "to_colocated", pick.inst_id,
-                                 "load recovered")
-        return ScaleDecision(t, "none")
-
+    # ------------------------------------------------------- decode loop --
     def evaluate(self, t: float, snaps: List[InstanceSnapshot],
                  viol_frac: float, ft_backlog: float = 0.0) -> ScaleDecision:
-        """One control tick. Applies cooldown, records the decision."""
+        """One decode-loop control tick: delegate to the configured
+        ``decode_policy``, apply cooldown, record the decision."""
         if self._cooldown > 0:
             self._cooldown -= 1
             d = ScaleDecision(t, "none", reason="cooldown")
         else:
-            d = self._decide(t, snaps, viol_frac, ft_backlog)
+            d = self._policy(self.cfg.decode_policy).decide(
+                t, self.cfg, dict(snaps=snaps, viol_frac=viol_frac,
+                                  ft_backlog=ft_backlog))
             if d.action != "none":
                 self._cooldown = self.cfg.cooldown_ticks
         assert d.action in ACTIONS
@@ -182,71 +140,19 @@ class Autoscaler:
         (``prefill_per_decode`` workers per serving instance) so a decode
         scale-up pulls prefill capacity with it instead of waiting for the
         queue to back up first."""
-        cfg = self.cfg
-        floor = max(cfg.min_prefill,
-                    math.ceil(cfg.prefill_per_decode * n_serving))
-        return min(floor, cfg.max_prefill)
+        from repro.core.policies.scaling import coordinated_prefill_floor
+        return coordinated_prefill_floor(self.cfg, n_serving)
 
-    def _decide_prefill(self, t: float, snap, n_serving: int
-                        ) -> ScaleDecision:
-        """snap: PrefillPoolSnapshot (core/prefill_pool.py) — kept untyped
-        here so the controller stays importable without the pool module."""
-        cfg = self.cfg
-        n = snap.n_workers
-        floor = self.prefill_floor(n_serving)
-        if n < floor:
-            return ScaleDecision(t, "add_prefill",
-                                 reason=f"floor={floor} serving={n_serving}")
-        # TTFT headroom / queue pressure -> grow
-        slo = self.prefill_ttft_slo_s
-        if n < cfg.max_prefill:
-            if snap.queue_depth > cfg.prefill_queue_hi * max(n, 1):
-                return ScaleDecision(t, "add_prefill",
-                                     reason=f"queue={snap.queue_depth}")
-            if slo > 0 and snap.wait_p99 > cfg.ttft_headroom * slo:
-                return ScaleDecision(
-                    t, "add_prefill",
-                    reason=f"wait_p99={snap.wait_p99:.2f}")
-        # deep idle above the coordinated floor -> shrink
-        if n > floor and snap.queue_depth == 0 \
-                and snap.backlog_s <= cfg.prefill_idle_backlog_s \
-                and (slo <= 0 or snap.wait_p99 <
-                     0.5 * cfg.ttft_headroom * slo):
-            return ScaleDecision(t, "remove_prefill",
-                                 reason=f"idle backlog={snap.backlog_s:.2f}")
-        return ScaleDecision(t, "none")
-
-    def _decide_chunked(self, t: float, wait_p99: float, viol_frac: float,
-                        budget: int, lo: int, hi: int, n_serving: int
-                        ) -> ScaleDecision:
-        cfg = self.cfg
-        slo = self.prefill_ttft_slo_s
-        step = cfg.chunk_step_tokens
-        # TTFT headroom eroding -> spend more of each round on prefill;
-        # once the budget is maxed (or the QoS price caps below it), the
-        # only remaining lever is decode capacity itself — in chunked mode
-        # prefill capacity IS the decode fleet, so this loop may grow it
-        if slo > 0 and wait_p99 > cfg.ttft_headroom * slo:
-            if budget < hi:
-                # multiplicative increase / additive decrease: a backlog
-                # compounds while the budget crawls, so growth must outrun
-                # it — escalation to fleet growth then starts within a few
-                # ticks instead of after max_budget/step of them
-                return ScaleDecision(
-                    t, "grow_chunk_budget", target=min(budget * 2, hi),
-                    reason=f"chunk_wait_p99={wait_p99:.2f}")
-            if n_serving < cfg.max_decode:
-                return ScaleDecision(
-                    t, "add_instance",
-                    reason=f"chunk_wait_p99={wait_p99:.2f} budget maxed")
-            return ScaleDecision(t, "none", reason="at max_decode")
-        # TTFT comfortable but TPOT under pressure -> hand tokens back
-        if budget > lo and viol_frac > cfg.viol_frac_shed and \
-                (slo <= 0 or wait_p99 < 0.5 * cfg.ttft_headroom * slo):
-            return ScaleDecision(
-                t, "shrink_chunk_budget", target=max(budget - step, lo),
-                reason=f"viol={viol_frac:.3f}")
-        return ScaleDecision(t, "none")
+    def evaluate_prefill(self, t: float, snap, n_serving: int
+                         ) -> ScaleDecision:
+        """One prefill-pool control tick (second loop), delegating to the
+        configured ``prefill_policy``. Own cooldown so a decode action
+        never starves the pool of attention; decisions land in the same
+        log as the decode loop's. ``snap`` is a PrefillPoolSnapshot."""
+        return self._prefill_tick(
+            t, self.cfg.prefill_policy,
+            dict(snap=snap, n_serving=n_serving,
+                 ttft_slo_s=self.prefill_ttft_slo_s))
 
     def evaluate_chunked(self, t: float, wait_p99: float, viol_frac: float,
                          budget: int, lo: int, hi: int, n_serving: int = 0
@@ -257,28 +163,19 @@ class Autoscaler:
         escalating to ``add_instance`` once the budget is maxed. Shares
         the prefill loop's cooldown — it occupies the same control slot,
         just mode-aware."""
-        if self._prefill_cooldown > 0:
-            self._prefill_cooldown -= 1
-            d = ScaleDecision(t, "none", reason="prefill cooldown")
-        else:
-            d = self._decide_chunked(t, wait_p99, viol_frac, budget, lo, hi,
-                                     n_serving)
-            if d.action != "none":
-                self._prefill_cooldown = self.cfg.prefill_cooldown_ticks
-        assert d.action in ACTIONS
-        self.decisions.append(d)
-        return d
+        return self._prefill_tick(
+            t, self.cfg.chunk_policy,
+            dict(wait_p99=wait_p99, viol_frac=viol_frac, budget=budget,
+                 lo=lo, hi=hi, n_serving=n_serving,
+                 ttft_slo_s=self.prefill_ttft_slo_s))
 
-    def evaluate_prefill(self, t: float, snap, n_serving: int
-                         ) -> ScaleDecision:
-        """One prefill-pool control tick (second loop). Own cooldown so a
-        decode action never starves the pool of attention; decisions land
-        in the same log as the decode loop's."""
+    def _prefill_tick(self, t: float, policy: str,
+                      signals: Dict) -> ScaleDecision:
         if self._prefill_cooldown > 0:
             self._prefill_cooldown -= 1
             d = ScaleDecision(t, "none", reason="prefill cooldown")
         else:
-            d = self._decide_prefill(t, snap, n_serving)
+            d = self._policy(policy).decide(t, self.cfg, signals)
             if d.action != "none":
                 self._prefill_cooldown = self.cfg.prefill_cooldown_ticks
         assert d.action in ACTIONS

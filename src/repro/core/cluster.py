@@ -4,29 +4,33 @@ decode instances.
 Composes the pieces into one discrete-event experiment:
 
   * a trace of requests arrives at the cluster front door;
-  * ClusterRouter (core/router.py) admits each request (or rejects it under
-    saturation) into the disaggregated PrefillPool (core/prefill_pool.py):
-    TTFT-deadline-ordered queue, batched prefill on a scalable worker pool;
+  * ClusterRouter (core/router.py) admits each request (or rejects it
+    under saturation) into the configured prefill placement;
   * completed prefills are handed to one decode instance chosen by the
-    routing policy (least_loaded / predicted_latency / session_affinity /
-    round_robin / random);
+    registered routing policy (core/policies/routing.py + plugins);
   * every DecodeInstanceSim advances on a shared clock via its step() API;
   * the Autoscaler (core/autoscaler.py) runs two coordinated control loops
     every interval: the decode loop grows/shrinks the fleet or flips roles
     between decode-only, co-located and finetune-dedicated; the prefill
-    loop sizes the pool against TTFT headroom with a floor that tracks the
-    serving fleet.
+    loop is owned by the placement (pool sizing in pooled mode, chunk-
+    budget tuning in chunked mode, idle in chained mode).
 
-Three deployment modes (``ClusterConfig.prefill_mode``; docs/cluster.md):
-``chained`` is PR 1's per-instance serialized prefill chain (the measurable
-baseline, also selected by ``prefill=None``); ``pooled`` is the
-disaggregated pool above; ``chunked`` mixes prefill chunks into the decode
-instances' own rounds under a QoS-priced per-round token budget (FlexLLM-
-style token-level co-serving) — no prefill tier at all, and the
-autoscaler's prefill loop tunes the chunk budget instead of a pool size.
-``ClusterConfig.prefix_cache`` additionally gives every serving instance a
-session prefix cache (core/prefix_cache.py) so sticky routing shortens
-effective prefill on hits.
+This module is **mechanism**: the shared clock, arrival dispatch, epoch
+stepping, drain/retire lifecycle, decision application and result
+accounting. Everything mode-specific lives in the ``PrefillPlacement``
+policy object (core/policies/placement.py) resolved by name from
+``ClusterConfig.prefill_mode`` — ``chained`` is PR 1's per-instance
+serialized prefill chain (the measurable baseline, also selected by
+``prefill=None``); ``pooled`` is the disaggregated pool; ``chunked``
+mixes prefill chunks into the decode instances' own rounds (docs/
+cluster.md). ``ClusterConfig.prefix_cache`` additionally gives every
+serving instance a session prefix cache (core/prefix_cache.py) so
+cache-aware routing shortens effective prefill on hits.
+
+``ClusterConfig.instance_overrides`` is the heterogeneous-fleet hook:
+entry *i* overrides ``SimConfig`` fields (tp, max_slots, qos_s, ...) for
+the *i*-th spawned instance, so a fleet can mix hardware shapes in one
+experiment (``ExperimentSpec`` validates the keys).
 
 Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
   harli    — every serving instance co-locates a finetune job, dynamic
@@ -41,15 +45,15 @@ Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from repro.core import api
 from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot, ScaleDecision)
 from repro.core.costmodel import CostModel, InstanceSpec
-from repro.core.prefill_pool import PrefillPool, PrefillPoolConfig
+from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
-from repro.core.router import (PREFILL_MODES, ClusterRouter, ClusterStats,
-                               RouterConfig)
+from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
 from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
                                   SimConfig, fit_predictor)
 from repro.models.config import ModelConfig
@@ -66,9 +70,10 @@ class ClusterConfig:
     router: RouterConfig = dataclasses.field(default_factory=RouterConfig)
     autoscaler: AutoscalerConfig = dataclasses.field(
         default_factory=AutoscalerConfig)
-    # deployment mode: "chained" | "pooled" | "chunked". None (default)
-    # derives it from `prefill` for backward compatibility: a pool config
-    # means "pooled", prefill=None means the PR 1 chain ("chained")
+    # deployment mode: any registered prefill placement ("chained" |
+    # "pooled" | "chunked" built in). None (default) derives it from
+    # `prefill` for backward compatibility: a pool config means "pooled",
+    # prefill=None means the PR 1 chain ("chained")
     prefill_mode: Optional[str] = None
     # prefill tier: None = legacy per-instance prefill chain (PR 1)
     prefill: Optional[PrefillPoolConfig] = dataclasses.field(
@@ -78,12 +83,16 @@ class ClusterConfig:
         default_factory=ChunkedPrefillConfig)
     # per-instance session prefix cache; None = cache-less (PR 3 behaviour)
     prefix_cache: Optional[PrefixCacheConfig] = None
+    # heterogeneous-fleet hook: entry i replaces SimConfig fields for the
+    # i-th spawned instance (by spawn order; autoscaler spawns past the
+    # list use the base SimConfig). Keys are validated by ExperimentSpec.
+    instance_overrides: Tuple[Dict, ...] = ()
 
     def resolved_mode(self) -> str:
         mode = self.prefill_mode
         if mode is None:
             mode = "pooled" if self.prefill is not None else "chained"
-        assert mode in PREFILL_MODES, mode
+        api.resolve_policy("prefill", mode)    # raises on unknown names
         return mode
 
 
@@ -118,8 +127,8 @@ class ClusterResult:
 
 
 class ClusterSim:
-    """Owns the fleet, the prefill pool and the shared clock; applies both
-    autoscaler control loops' decisions."""
+    """Owns the fleet, the shared clock and the prefill placement; applies
+    both autoscaler control loops' decisions."""
 
     def __init__(self, cfg_inf: ModelConfig, cfg_ft: ModelConfig,
                  sim: SimConfig, cluster: ClusterConfig):
@@ -135,29 +144,18 @@ class ClusterSim:
         if rcfg.seed == 0:
             rcfg = dataclasses.replace(
                 rcfg, seed=sim.seed + ROUTER_SEED_SALT)
+        self.router_cfg = rcfg
         self.mode = cluster.resolved_mode()
-        pool = None
-        if self.mode == "pooled":
-            pool = PrefillPool(
-                cluster.prefill or PrefillPoolConfig(),
-                CostModel(cfg_inf, spec, seed=sim.seed + 7),
-                ttft_slo_s=rcfg.ttft_slo_s)
+        placement_cls = api.resolve_policy("prefill", self.mode)
+        self.placement: api.PrefillPlacement = placement_cls.build(self)
         self.router = ClusterRouter(
             rcfg, CostModel(cfg_inf, spec, seed=sim.seed + 7),
-            prefill_pool=pool, predictor=self.predictor, mode=self.mode)
+            predictor=self.predictor, placement=self.placement)
         self.autoscaler = Autoscaler(cluster.autoscaler)
         self.autoscaler.prefill_ttft_slo_s = rcfg.ttft_slo_s
         self._next_id = 0
         self._fleet_timeline: List[Tuple[float, int, int]] = []
-        self._prefill_timeline: List[Tuple[float, int, int]] = []
-        self._chunk_timeline: List[Tuple[float, int]] = []
-        # the initial budget must already sit inside the control loop's
-        # operating range, or the AIMD tuner starts out of bounds
-        ccfg = cluster.chunked
-        self._chunk_budget = int(min(max(ccfg.budget_tokens,
-                                         ccfg.min_budget), ccfg.max_budget))
         self._peak_total = 0
-        self._peak_prefill = len(pool.workers) if pool is not None else 0
         if sim.mode == "separate":
             for _ in range(max(cluster.n_initial - 1, 1)):
                 self._spawn(0.0, role="decode", colocate=False)
@@ -169,17 +167,17 @@ class ClusterSim:
     # ------------------------------------------------------------ fleet --
     def _spawn(self, t: float, role: str, colocate: bool = True,
                serves_inference: bool = True) -> DecodeInstanceSim:
-        chunked = None
-        if self.mode == "chunked" and serves_inference:
-            # a late joiner starts at the fleet's CURRENT budget, not t=0's
-            chunked = dataclasses.replace(
-                self.cluster.chunked, budget_tokens=self._chunk_budget)
+        sim = self.sim
+        overrides = self.cluster.instance_overrides
+        if self._next_id < len(overrides) and overrides[self._next_id]:
+            sim = dataclasses.replace(sim, **overrides[self._next_id])
         inst = DecodeInstanceSim(
             self._next_id, self.cfg_inf if serves_inference else self.cfg_ft,
-            self.cfg_ft if colocate else None, self.sim,
+            self.cfg_ft if colocate else None, sim,
             self.predictor, self.sim.seed + self._next_id,
             serves_inference=serves_inference, t0=t, role=role,
-            chunked=chunked, prefix_cache=self.cluster.prefix_cache)
+            prefix_cache=self.cluster.prefix_cache,
+            **self.placement.spawn_kwargs(self, serves_inference))
         self._next_id += 1
         self.router.add_instance(inst, now=t)
         return inst
@@ -204,23 +202,14 @@ class ClusterSim:
             return 1.0               # best-effort: backlog never empties
         return max(target * t - done, 0.0)
 
-    def _apply(self, d: ScaleDecision, t: float) -> None:
+    def apply_decision(self, d: ScaleDecision, t: float) -> None:
+        """Apply one decode-loop decision (also called by placements that
+        escalate to fleet growth, e.g. chunked-budget maxed)."""
         insts = self.router.instances
         if d.action == "add_instance":
             role = "colocated" if self.sim.mode == "harli" else "decode"
             self._spawn(t, role=role, colocate=self.sim.mode == "harli")
-            # coordinated scaling: a decode scale-up pulls the prefill pool
-            # to its floor immediately (the legacy chain got this for free —
-            # every instance carried a chain), instead of waiting a tick
-            pool = self.router.pool
-            if pool is not None:
-                floor = self.autoscaler.prefill_floor(len(self._serving()))
-                while len(pool.active_workers()) < floor:
-                    pool.add_worker(t)
-                    self.autoscaler.decisions.append(ScaleDecision(
-                        t, "add_prefill", reason="coordinated scale-up"))
-                self._peak_prefill = max(self._peak_prefill,
-                                         len(pool.active_workers()))
+            self.placement.on_scale_up(self, t)
         elif d.action == "remove_instance":
             inst = insts.get(d.target)
             # guard at application time too: never drain below the floor
@@ -243,36 +232,10 @@ class ClusterSim:
                     self.cluster.autoscaler.min_decode:
                 inst.set_role("finetune")
 
-    def _apply_prefill(self, d: ScaleDecision, t: float) -> None:
-        pool = self.router.pool
-        if pool is None:
-            return
-        if d.action == "add_prefill":
-            pool.add_worker(t)
-            self._peak_prefill = max(self._peak_prefill,
-                                     len(pool.active_workers()))
-        elif d.action == "remove_prefill":
-            # guard at application time: never drain below the hard floor
-            pool.drain_worker(
-                min_workers=max(self.cluster.autoscaler.min_prefill, 1))
-
-    def _apply_chunked(self, d: ScaleDecision) -> None:
-        """Fleet-wide chunk-budget change (the decision's target carries
-        the new budget); future spawns inherit it via _spawn."""
-        if d.action not in ("grow_chunk_budget", "shrink_chunk_budget"):
-            return
-        ccfg = self.cluster.chunked
-        self._chunk_budget = int(
-            min(max(d.target, ccfg.min_budget), ccfg.max_budget))
-        for inst in self.router.instances.values():
-            if inst.chunked is not None:
-                inst.chunk_budget = self._chunk_budget
-
     # ------------------------------------------------------------- loop --
     def run(self, reqs: List[Request],
             duration: Optional[float] = None) -> ClusterResult:
         cl = self.cluster
-        pool = self.router.pool
         pending = sorted(reqs, key=lambda r: (r.arrival, r.rid))
         if duration is None:
             last = max((r.arrival for r in reqs), default=0.0)
@@ -292,34 +255,16 @@ class ClusterSim:
                     inst.step(epoch_end)
                 if inst.drained:
                     self.router.retire(inst.inst_id)
-            if pool is not None:
-                pool.retire_drained(epoch_end)
+            self.placement.retire(self, epoch_end)
             if cl.autoscale and epoch_end + 1e-9 >= next_control:
                 viol = self.router.recent_violation_frac()
                 d = self.autoscaler.evaluate(
                     epoch_end, self._snapshots(), viol,
                     self._ft_backlog(epoch_end))
-                self._apply(d, epoch_end)
-                if pool is not None:
-                    pd = self.autoscaler.evaluate_prefill(
-                        epoch_end, pool.snapshot(epoch_end),
-                        n_serving=len(self._serving()))
-                    self._apply_prefill(pd, epoch_end)
-                elif self.mode == "chunked":
-                    # mode-aware prefill loop: no pool to size — tune the
-                    # per-round chunk budget against TTFT headroom, and
-                    # escalate to fleet growth once the budget is maxed
-                    ccfg = cl.chunked
-                    cd = self.autoscaler.evaluate_chunked(
-                        epoch_end,
-                        self.router.recent_chunk_wait_p99(epoch_end),
-                        viol, self._chunk_budget,
-                        ccfg.min_budget, ccfg.max_budget,
-                        n_serving=len(self._serving()))
-                    if cd.action == "add_instance":
-                        self._apply(cd, epoch_end)
-                    else:
-                        self._apply_chunked(cd)
+                self.apply_decision(d, epoch_end)
+                # the placement's own control slot (pool sizing / chunk-
+                # budget tuning / idle in chained mode)
+                self.placement.control(self, epoch_end, viol)
                 next_control += cl.autoscaler.interval_s
             t = epoch_end
             self._fleet_point(t, self._serving())
@@ -332,13 +277,7 @@ class ClusterSim:
              sum(1 for i in serving if i.role == "colocated")))
         self._peak_total = max(self._peak_total,
                                len(self.router.instances))
-        pool = self.router.pool
-        if pool is not None:
-            n_active = len(pool.active_workers())
-            self._prefill_timeline.append((t, n_active, pool.queue_depth))
-            self._peak_prefill = max(self._peak_prefill, n_active)
-        if self.mode == "chunked":
-            self._chunk_timeline.append((t, self._chunk_budget))
+        self.placement.record_timeline(self, t)
 
     def _result(self, duration: float) -> ClusterResult:
         for inst in self.router.all_instances():
@@ -359,17 +298,10 @@ class ClusterSim:
             res.qos_violation_frac = \
                 sum(1 for x in res.tpot if x > lim) / len(res.tpot)
         res.fleet_timeline = self._fleet_timeline
-        res.prefill_timeline = self._prefill_timeline
         res.decisions = self.autoscaler.decisions
         res.final_fleet = len(self.router.instances)
         res.peak_fleet = max(self._peak_total, res.final_fleet)
-        pool = self.router.pool
-        if pool is not None:
-            res.final_prefill = len(pool.active_workers())
-            res.peak_prefill = max(self._peak_prefill, res.final_prefill)
-        if self.mode == "chunked":
-            res.chunk_budget_timeline = self._chunk_timeline
-            res.final_chunk_budget = self._chunk_budget
+        self.placement.finalize(self, res)
         for inst in self.router.all_instances():
             if inst.prefix_cache is not None:
                 res.prefix_hits += inst.prefix_cache.stats.hits

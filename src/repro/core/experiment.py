@@ -1,0 +1,265 @@
+"""Unified experiment specification for the cluster control plane.
+
+Before this module, every entry point (examples/cluster_sim.py,
+benchmarks/*, tests) hand-wired four overlapping config dataclasses
+(SimConfig, TraceConfig, RouterConfig, ClusterConfig) plus autoscaler
+knobs, each with its own seed conventions — and contradictory
+combinations (a chunk budget in pooled mode, pool workers in chained
+mode) were silently ignored. ``ExperimentSpec`` is the one object that
+composes all of it, with:
+
+  * ``validate()``   — registry-checked policy names and *loud* rejection
+    of contradictory mode/knob combinations, with the fix in the message;
+  * ``to_json`` / ``from_json`` — loss-free round trip, so an experiment
+    is a reviewable artifact (``examples/specs/*.json``) and
+    ``cluster_sim.py --spec file.json`` reruns it exactly;
+  * ``run()``        — the single entry point: generate the trace
+    (seeded ``seed + 1``, the convention every example already used) and
+    run the cluster simulation;
+  * ``instance_overrides`` (on ``ClusterConfig``) — the heterogeneous-
+    fleet hook, validated here: entry *i* replaces SimConfig fields for
+    the *i*-th spawned instance (mixed tp, mixed slot budgets, ...).
+
+Determinism: a spec fully determines the experiment —
+``from_json(spec.to_json()).run()`` is seed-identical to ``spec.run()``
+(tested), and the legacy string-kwarg construction path produces
+bit-identical results (pinned per prefill mode in tests/test_api.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.configs import get_config
+from repro.core import api
+from repro.core.cluster import (ClusterConfig, ClusterResult,
+                                simulate_cluster)
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.simulator import ChunkedPrefillConfig, SimConfig
+from repro.serving.request import Request
+from repro.serving.trace import SCENARIOS, TraceConfig, generate, \
+    generate_scenario
+
+SIM_MODES = ("harli", "static", "separate")
+# per-instance override keys: any SimConfig field except the experiment
+# identity ones (mode is fleet-wide; per-instance seeds derive from it)
+OVERRIDABLE_SIM_FIELDS = tuple(
+    f.name for f in dataclasses.fields(SimConfig)
+    if f.name not in ("mode", "seed"))
+
+
+class SpecError(ValueError):
+    """An ExperimentSpec that cannot mean what it says — unknown names or
+    contradictory knob combinations. The message states the fix."""
+
+
+def _from_dict(cls, data):
+    """Reconstruct a (possibly nested) config dataclass from plain dicts,
+    rejecting unknown keys with the valid field names in the message."""
+    if data is None:
+        return None
+    if not dataclasses.is_dataclass(cls):
+        return data
+    if isinstance(data, cls):
+        return data
+    if not isinstance(data, dict):
+        raise SpecError(f"{cls.__name__} must be an object, "
+                        f"got {type(data).__name__}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - set(fields))
+    if unknown:
+        raise SpecError(
+            f"unknown {cls.__name__} field(s) {', '.join(unknown)}; "
+            f"valid fields: {', '.join(sorted(fields))}")
+    hints = typing.get_type_hints(cls)
+    kwargs = {}
+    for name, value in data.items():
+        t = hints[name]
+        origin = typing.get_origin(t)
+        if origin is Union:                      # Optional[X]
+            args = [a for a in typing.get_args(t) if a is not type(None)]
+            t, origin = args[0], typing.get_origin(args[0])
+        if dataclasses.is_dataclass(t):
+            value = _from_dict(t, value)
+        elif origin is tuple and value is not None:
+            value = tuple(value)
+        kwargs[name] = value
+    return cls(**kwargs)
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """One cluster experiment, fully specified and JSON-serializable.
+
+    ``seed`` is the experiment's base seed: the trace draws at
+    ``seed + 1`` (the convention examples/cluster_sim.py always used);
+    ``sim.seed`` / ``cluster.router.seed`` keep their own threading
+    (router derives from sim unless explicit). ``trace`` overrides the
+    scenario preset entirely when given."""
+
+    name: str = "experiment"
+    inf_model: str = "llama3-8b"         # serving model config name
+    ft_model: str = "llama3-8b"          # finetune model config name
+    scenario: str = "spike"              # trace preset (serving/trace.py)
+    duration_s: float = 60.0
+    mean_rps: float = 10.0
+    n_sessions: int = 0                  # sticky sessions in the trace
+    seed: int = 0
+    trace: Optional[TraceConfig] = None  # full trace override
+    sim: SimConfig = dataclasses.field(default_factory=SimConfig)
+    cluster: ClusterConfig = dataclasses.field(default_factory=ClusterConfig)
+
+    # ------------------------------------------------------- validation --
+    def validate(self) -> "ExperimentSpec":
+        """Raise ``SpecError`` on unknown names or contradictory knob
+        combinations (the centralized check examples/cluster_sim.py and
+        ``run()`` both go through). Returns self for chaining."""
+        for role, model in (("inf_model", self.inf_model),
+                            ("ft_model", self.ft_model)):
+            try:
+                get_config(model)
+            except Exception as e:
+                raise SpecError(f"{role}={model!r}: {e}") from None
+        if self.trace is None and self.scenario not in SCENARIOS:
+            raise SpecError(f"unknown scenario {self.scenario!r}; choose "
+                            f"from {', '.join(SCENARIOS)}")
+        if self.trace is not None:
+            # with a full trace override the top-level trace-shape fields
+            # must mirror it — they feed reports and duration scaling, and
+            # a silent disagreement is exactly the ignored-knob class this
+            # method exists to reject
+            for fld, tval in (("duration_s", self.trace.duration_s),
+                              ("mean_rps", self.trace.mean_rps),
+                              ("n_sessions", self.trace.n_sessions)):
+                if getattr(self, fld) != tval:
+                    raise SpecError(
+                        f"trace override is set but {fld}="
+                        f"{getattr(self, fld)} disagrees with trace.{fld}"
+                        f"={tval} — set both to the same value (the trace"
+                        " is what actually runs)")
+        if self.duration_s <= 0 or self.mean_rps <= 0:
+            raise SpecError("duration_s and mean_rps must be positive")
+        if self.n_sessions < 0:
+            raise SpecError("n_sessions must be >= 0")
+        if self.sim.mode not in SIM_MODES:
+            raise SpecError(f"unknown sim.mode {self.sim.mode!r}; choose "
+                            f"from {', '.join(SIM_MODES)}")
+        cl = self.cluster
+        if cl.n_initial < 1:
+            raise SpecError("cluster.n_initial must be >= 1")
+        # registry-checked names: routing policy, prefill placement and
+        # all three scaling-loop policies must resolve
+        try:
+            api.resolve_policy("routing", cl.router.policy)
+            mode = cl.resolved_mode()
+            for loop in ("decode_policy", "prefill_policy", "chunk_policy"):
+                api.resolve_policy("scaling", getattr(cl.autoscaler, loop))
+        except api.PolicyNotFoundError as e:
+            raise SpecError(str(e)) from None
+        # contradictory mode/knob combinations: a knob configured away
+        # from its default for a mode that cannot read it is a silent
+        # no-op — reject it loudly instead
+        if mode == "pooled" and cl.prefill is None:
+            raise SpecError(
+                "prefill_mode 'pooled' needs a prefill pool config "
+                "(cluster.prefill / --prefill-workers >= 1)")
+        if mode != "pooled" and cl.prefill is not None \
+                and cl.prefill != PrefillPoolConfig():
+            raise SpecError(
+                f"prefill pool configured ({cl.prefill}) but prefill_mode "
+                f"is {mode!r} — the pool only exists in pooled mode; drop "
+                "the pool config (CLI: --prefill-workers only applies to "
+                "--prefill-mode pooled)")
+        if mode != "chunked" and cl.chunked != ChunkedPrefillConfig():
+            raise SpecError(
+                f"chunked-prefill knobs configured ({cl.chunked}) but "
+                f"prefill_mode is {mode!r} — they only apply in chunked "
+                "mode; drop them (CLI: --chunk-budget / --fuse-quantum "
+                "only apply to --prefill-mode chunked)")
+        if cl.prefix_cache is not None and self.n_sessions == 0 \
+                and self.scenario != "session_heavy":
+            # session_heavy defaults its own sessions on; any other
+            # sessionless trace would make the cache pure cost — it
+            # reserves real allocator capacity (shrinking the finetune
+            # window and KV budget) and can never hit
+            raise SpecError(
+                "prefix_cache configured but the trace is sessionless "
+                "(n_sessions=0) — the session-keyed cache would reserve "
+                "allocator capacity and never hit; set n_sessions > 0 "
+                "or drop prefix_cache")
+        for i, ov in enumerate(cl.instance_overrides):
+            if not isinstance(ov, dict):
+                raise SpecError(f"instance_overrides[{i}] must be an "
+                                "object of SimConfig fields")
+            bad = sorted(set(ov) - set(OVERRIDABLE_SIM_FIELDS))
+            if bad:
+                raise SpecError(
+                    f"instance_overrides[{i}] has non-overridable "
+                    f"field(s) {', '.join(bad)}; overridable: "
+                    f"{', '.join(OVERRIDABLE_SIM_FIELDS)}")
+        return self
+
+    # ------------------------------------------------------------- JSON --
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        # normalize: a *default* pool config outside pooled mode is just
+        # the dataclass default riding along — write null so the JSON
+        # artifact states only what the experiment reads
+        mode = self.cluster.prefill_mode
+        if mode is None:
+            mode = "pooled" if self.cluster.prefill is not None \
+                else "chained"
+        if mode != "pooled" and self.cluster.prefill == PrefillPoolConfig():
+            d["cluster"]["prefill"] = None
+        return d
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "ExperimentSpec":
+        return _from_dict(cls, data)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        try:
+            data = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"spec is not valid JSON: {e}") from None
+        return cls.from_dict(data)
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    # -------------------------------------------------------------- run --
+    def with_mode(self, sim_mode: str) -> "ExperimentSpec":
+        """Copy of this spec with ``sim.mode`` replaced (harli-vs-separate
+        comparisons run the same spec under both)."""
+        return dataclasses.replace(
+            self, sim=dataclasses.replace(self.sim, mode=sim_mode))
+
+    def requests(self) -> List[Request]:
+        """The (seeded, deterministic) trace this spec describes."""
+        if self.trace is not None:
+            return generate(self.trace)
+        return generate_scenario(self.scenario, self.duration_s,
+                                 self.mean_rps, seed=self.seed + 1,
+                                 n_sessions=self.n_sessions)
+
+    def run(self, duration: Optional[float] = None) -> ClusterResult:
+        """Validate, generate the trace, run the cluster experiment.
+        Deterministic: same spec (same JSON) -> same ClusterResult."""
+        self.validate()
+        cfg_inf = get_config(self.inf_model)
+        cfg_ft = get_config(self.ft_model)
+        return simulate_cluster(cfg_inf, cfg_ft, self.requests(),
+                                self.sim, self.cluster, duration)

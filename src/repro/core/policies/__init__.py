@@ -1,0 +1,22 @@
+"""Built-in control-plane policies (core/api.py registry).
+
+Importing this package registers every built-in policy:
+
+  * routing    — least_loaded / round_robin / random / predicted_latency /
+                 session_affinity (core/policies/routing.py)
+  * routing    — cache_aware, the registry's proof-of-API plugin
+                 (core/policies/cache_aware.py, docs/api.md walkthrough)
+  * prefill    — chained / pooled / chunked deployment modes
+                 (core/policies/placement.py)
+  * scaling    — decode_fleet / pooled_prefill / chunked_budget autoscaler
+                 loops (core/policies/scaling.py)
+
+The registry imports this package lazily on first resolve, so user code
+never needs to import it explicitly; third-party policies just call
+``repro.core.api.register_policy`` from their own module.
+"""
+
+from repro.core.policies import cache_aware  # noqa: F401
+from repro.core.policies import placement  # noqa: F401
+from repro.core.policies import routing  # noqa: F401
+from repro.core.policies import scaling  # noqa: F401

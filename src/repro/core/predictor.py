@@ -41,6 +41,9 @@ class FitReport:
     mixed_samples: int = 0
     mixed_mean_err: float = 0.0
     mixed_max_err: float = 0.0
+    mixed_fused_samples: int = 0        # fused-quantum chunk rounds
+    mixed_fused_mean_err: float = 0.0
+    mixed_fused_max_err: float = 0.0
 
 
 class TwoStageLatencyPredictor:
@@ -54,6 +57,7 @@ class TwoStageLatencyPredictor:
         self.colo_coef: Optional[np.ndarray] = None    # Eq. 3 (b1, k1)
         self.colo_lr_coef: Optional[np.ndarray] = None  # roofline-LR
         self.mixed_coef: Optional[np.ndarray] = None    # chunked-prefill
+        self.mixed_fused_coef: Optional[np.ndarray] = None  # q_ft>0 rounds
         self.report = FitReport()
 
     # ------------------------------------------------------------- stage 1
@@ -188,6 +192,40 @@ class TwoStageLatencyPredictor:
         return float(self._mixed_features(q_ft, bs, seqlen, chunk_tokens)
                      @ self.mixed_coef)
 
+    # -------------------------------------- fused-quantum chunk rounds
+    #
+    # ``ChunkedPrefillConfig.fuse_quantum`` prices rounds that carry BOTH
+    # a prefill chunk and a reduced finetune quantum. The base mixed
+    # stage is profiled exclusively at q_ft=0 (its inverse prices the
+    # chunk cap on quantum-0 rounds and must stay bit-stable), so
+    # extrapolating it to q_ft>0 carries 25-45% error at large quanta.
+    # This stage refits the same linear form on samples that *include*
+    # q_ft>0 rounds, so the fused admission check interpolates instead.
+    def fit_mixed_fused(self, samples: List[Tuple[float, int, int, int,
+                                                  float]]) -> None:
+        """samples: [(q_ft, bs, seqlen, chunk_tokens, latency_s)] with
+        q_ft spanning 0..~0.8."""
+        X = np.stack([self._mixed_features(q, bs, s, ct)
+                      for q, bs, s, ct, _ in samples])
+        y = np.array([lat for *_, lat in samples], np.float64)
+        self.mixed_fused_coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        rel = np.abs(X @ self.mixed_fused_coef - y) / np.maximum(y, 1e-9)
+        self.report.mixed_fused_samples = len(y)
+        self.report.mixed_fused_mean_err = float(np.mean(rel))
+        self.report.mixed_fused_max_err = float(np.max(rel))
+
+    def predict_mixed_fused(self, q_ft: float, bs: float, seqlen: float,
+                            chunk_tokens: int) -> float:
+        """Predicted latency of a round carrying a chunk AND a finetune
+        quantum — the fused-admission price check. Falls back to the
+        q_ft=0 mixed stage when the fused stage is not fitted."""
+        if self.mixed_fused_coef is None:
+            return self.predict_mixed(q_ft, bs, seqlen, chunk_tokens)
+        if chunk_tokens <= 0:
+            return self.predict_colo(q_ft, bs, seqlen)
+        return float(self._mixed_features(q_ft, bs, seqlen, chunk_tokens)
+                     @ self.mixed_fused_coef)
+
     def max_chunk_tokens(self, q_ft: float, bs: float, seqlen: float,
                          limit_s: float, cap: int) -> int:
         """Largest prefill chunk (<= cap) whose predicted mixed-round
@@ -245,4 +283,24 @@ class TwoStageLatencyPredictor:
                     lat = cm.mixed_round_latency(bs, s, ct, chunk_ctx=s)
                     mixed.append((0.0, bs, s, ct, lat))
         self.fit_mixed(mixed)
+
+        # fused-quantum stage (fuse_quantum rounds: chunk + reduced
+        # quantum). Sampled AFTER everything above so the q_ft=0 stages'
+        # samples — and therefore their coefficients and every seeded
+        # noise draw they consume — are bit-identical with or without it.
+        fused = list(mixed)
+        # low/mid/high quanta scaled to k_max (== (2, 5, 8) at the
+        # default k_max=10); every sample stays physically reachable
+        ks = sorted({max(self.k_max // 5, 1), max(self.k_max // 2, 1),
+                     max(4 * self.k_max // 5, 1)})
+        for ki in ks:
+            q_ft = ki / self.k_max
+            for bs in PROFILE_BS:
+                for s in (128, 256, 512):
+                    for ct in (64, 256):
+                        lat = cm.mixed_round_latency(
+                            bs, s, ct, chunk_ctx=s, k_units=ki,
+                            micro_batch=micro_batch, seq_len=ft_seq)
+                        fused.append((q_ft, bs, s, ct, lat))
+        self.fit_mixed_fused(fused)
         return self.report

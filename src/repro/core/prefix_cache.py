@@ -68,17 +68,27 @@ class PrefixCache:
         """Tokens of ``prompt_len`` covered by this session's cached prefix
         (0 on miss). A hit refreshes the entry's LRU position. At least one
         token always remains to prefill — the new turn's tokens are never
-        cached."""
+        cached. The hit itself is ``peek``'s computation, so a routing
+        decision made on a peek is granted exactly what it saw."""
         self.stats.lookups += 1
-        cached = self._entries.get(session_id)
-        hit = min(cached, prompt_len - 1) if cached is not None else 0
-        if hit < self.cfg.min_hit_tokens:
+        hit = self.peek(session_id, prompt_len)
+        if hit == 0:
             self.stats.misses += 1
             return 0
         self._entries.move_to_end(session_id)
         self.stats.hits += 1
         self.stats.hit_tokens += hit
         return hit
+
+    def peek(self, session_id: int, prompt_len: int) -> int:
+        """Non-mutating ``lookup``: same hit computation (min-hit floor,
+        last token never covered) but no stats and no LRU refresh — the
+        probe cross-instance cache-aware routing uses to compare every
+        candidate's cache before committing to one (whose ``lookup`` then
+        grants exactly the peeked credit)."""
+        cached = self._entries.get(session_id)
+        hit = min(cached, prompt_len - 1) if cached is not None else 0
+        return hit if hit >= self.cfg.min_hit_tokens else 0
 
     def revoke(self, hit_tokens: int) -> None:
         """Reverse one granted hit's accounting (the router calls this

@@ -7,42 +7,47 @@ observation that prefill and decode must be scheduled independently:
 
   1. **Admission** — a request is accepted or rejected against global
      decode saturation (an instance past ``reject_load`` is skipped as long
-     as any other can absorb; rejection fires only when none can).
-  2. **Prefill stage** — accepted requests enter the shared
-     ``PrefillPool`` (core/prefill_pool.py): TTFT-deadline-ordered queue,
-     batched prefill on a scalable pool of workers.
-  3. **Decode stage** — when a prefill completes, the request is handed to
-     one decode instance chosen by the routing policy; the instance admits
-     it into decode rounds once its ``ready_time`` passes.
+     as any other can absorb; rejection fires only when none can), plus any
+     extra backpressure the prefill placement adds (e.g. the pooled tier's
+     queue bound).
+  2. **Prefill stage** — owned by the ``PrefillPlacement`` policy object
+     (core/api.py): ``chained`` serializes prefill per instance, ``pooled``
+     runs the shared ``PrefillPool`` (core/prefill_pool.py), ``chunked``
+     has no prefill tier at all (chunks ride decode rounds).
+  3. **Decode stage** — the ``RoutingPolicy`` object picks one decode
+     instance; the instance admits the request into decode rounds once its
+     ``ready_time`` passes.
 
-Policies:
+This module is **pure mechanism**: exactly-once dispatch accounting, the
+hand-off path, conservation audit and goodput metrics. Every *decision* —
+which instance, where prefill runs, when to scale — lives in a policy
+class registered by name through ``repro.core.api`` (built-ins in
+``core/policies/``; ``RouterConfig.policy`` and the deployment mode are
+registry lookups, so a new policy is a plugin, not a branch here). The
+built-in routing policies and their semantics:
+
   * ``least_loaded``       — join-shortest-queue on the occupancy signal
   * ``round_robin`` / ``random``
   * ``predicted_latency``  — pick the instance with the lowest *predicted
     TPOT* from the fitted TwoStageLatencyPredictor, evaluated at the
     instance's current batch and finetune quantum (falls back to
     least_loaded when no predictor is fitted, e.g. separate mode)
-  * ``session_affinity``   — hash ``Request.session_id`` to a sticky
+  * ``session_affinity``   — ``Request.session_id`` maps to a sticky
     instance for prefix-cache reuse, overflowing (and remapping) to the
     least-loaded instance when the sticky one is past
     ``affinity_overflow_load``
-
-Deployment modes (``mode``; see docs/cluster.md "Three deployment modes"):
-  * ``chained`` — PR 1's per-instance serialized prefill chain (the
-    measurable baseline; ``prefill_pool=None`` implies it);
-  * ``pooled``  — the disaggregated PrefillPool above;
-  * ``chunked`` — no prefill tier at all: the request is placed on a decode
-    instance at admission and that instance runs its prefill in chunks
-    mixed into decode rounds (``DecodeInstanceSim.enqueue_chunked``), under
-    a QoS-priced per-round token budget.
+  * ``cache_aware``        — route to whichever instance's ``PrefixCache``
+    holds the longest matching prefix for the session, not just the sticky
+    one (core/policies/cache_aware.py — the registry's worked example)
 
 Session prefix cache (core/prefix_cache.py): when the chosen instance holds
-the request's session prefix, ``_credit_prefix`` shortens the effective
-prefill before any latency is charged. In pooled mode only
-``session_affinity`` benefits — the decode instance must be known *before*
-prefill runs, so the session's sticky instance is pinned at admission and
-honored at hand-off; other policies choose at hand-off, after prefill
-already ran at full length.
+the request's session prefix, ``credit_prefix`` shortens the effective
+prefill before any latency is charged. In pooled mode only *pinning*
+policies benefit — the decode instance must be known *before* prefill
+runs, so such a policy binds the instance at admission
+(``RoutingPolicy.pin_for_prefill``) and the pin is honored at hand-off;
+other policies choose at hand-off, after prefill already ran at full
+length.
 
 Conservation invariant (tested): every request handed to ``dispatch`` is
 rejected, still in the prefill stage, or enqueued on exactly one decode
@@ -52,36 +57,39 @@ instance — never dropped, never duplicated.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import api
+from repro.core.api import PENDING, REJECTED  # noqa: F401  (legacy home)
 from repro.core.costmodel import CostModel
 from repro.core.predictor import TwoStageLatencyPredictor
 from repro.core.prefill_pool import PrefillPool
 from repro.core.simulator import DecodeInstanceSim
 from repro.serving.request import Request
 
+# Legacy tuples of the built-in names, kept importable for back
+# compatibility; the registry (api.available_policies) is authoritative
+# and additionally lists plugins such as ``cache_aware``.
 POLICIES = ("least_loaded", "round_robin", "random",
             "predicted_latency", "session_affinity")
 PREFILL_MODES = ("chained", "pooled", "chunked")
 
-PENDING = -2     # admitted; still in the prefill stage
-REJECTED = -1
-
 
 @dataclasses.dataclass
 class RouterConfig:
-    policy: str = "least_loaded"
+    policy: str = "least_loaded"     # any registered routing policy name
     ttft_slo_s: float = 4.0          # prefill SLO (queue + prefill compute)
     tpot_slo_s: float = 0.040        # decode SLO, same target the QoS
     tpot_slack: float = 1.05         # scheduler enforces per round
     tpot_quantile: float = 0.99      # per-request attainment percentile
     reject_load: float = 4.0         # reject when every target's queue
     seed: int = 0                    # exceeds reject_load x max_slots
-    # session_affinity: sticky instance absorbs its sessions until its load
-    # passes this threshold, then the session remaps to the least loaded
+    # session_affinity: the sticky instance absorbs its sessions until
+    # its load passes this threshold, then the session remaps to the
+    # least loaded instance (cache_aware does not use this knob — it
+    # trades cache benefit against queue depth continuously)
     affinity_overflow_load: float = 1.0
 
 
@@ -136,41 +144,53 @@ class ClusterRouter:
     The fleet is shared with the cluster event loop and the autoscaler:
     instances may be added, put into draining, or have their role flipped
     between control periods; the router re-reads eligibility on every
-    dispatch. With a PrefillPool attached, prefill is a scheduled pooled
-    resource; without one, the PR 1 per-instance prefill chain is used.
+    dispatch. The routing policy and the prefill placement are policy
+    objects resolved through the registry; the legacy keyword form
+    (``prefill_pool=``/``mode=``) still constructs the matching placement
+    and stays bit-identical.
     """
 
     def __init__(self, cfg: RouterConfig, prefill_cm: CostModel,
                  prefill_pool: Optional[PrefillPool] = None,
                  predictor: Optional[TwoStageLatencyPredictor] = None,
-                 mode: Optional[str] = None):
-        assert cfg.policy in POLICIES, cfg.policy
-        if mode is None:              # legacy constructors: derive from pool
-            mode = "pooled" if prefill_pool is not None else "chained"
-        assert mode in PREFILL_MODES, mode
-        assert (mode == "pooled") == (prefill_pool is not None), \
-            "prefill pool supplied iff mode is 'pooled'"
-        self.mode = mode
+                 mode: Optional[str] = None,
+                 placement: Optional[api.PrefillPlacement] = None):
         self.cfg = cfg
         self.prefill_cm = prefill_cm
-        self.pool = prefill_pool
         self.predictor = predictor
+        self.policy: api.RoutingPolicy = \
+            api.resolve_policy("routing", cfg.policy)(cfg)
+        if placement is None:
+            # deprecation shim: derive the placement from the legacy
+            # (prefill_pool, mode) keywords exactly as before
+            if mode is None:
+                mode = "pooled" if prefill_pool is not None else "chained"
+            assert (mode == "pooled") == (prefill_pool is not None), \
+                "prefill pool supplied iff mode is 'pooled'"
+            cls = api.resolve_policy("prefill", mode)
+            placement = cls(prefill_pool) if mode == "pooled" else cls()
+        else:
+            assert prefill_pool is None and mode in (None, placement.name), \
+                "pass either a placement object or the legacy keywords"
+        self.placement = placement
+        self.mode = placement.name
         self.instances: Dict[int, DecodeInstanceSim] = {}
         self.retired: Dict[int, DecodeInstanceSim] = {}
-        self._prefill_free: Dict[int, float] = {}   # legacy per-inst chain
         self.routed: List[RoutedRequest] = []
         self._routed_ix: Dict[int, RoutedRequest] = {}
         self._assigned: Dict[int, int] = {}         # rid -> instance id
-        self._session_map: Dict[int, int] = {}      # session -> sticky inst
-        self._pinned: Dict[int, int] = {}           # rid -> pre-bound inst
-        self._rng = np.random.default_rng(cfg.seed)
-        self._rr_cursor = 0
+
+    @property
+    def pool(self) -> Optional[PrefillPool]:
+        """The pooled placement's PrefillPool (None in other modes) —
+        legacy accessor, kept for callers and the conservation audit."""
+        return getattr(self.placement, "pool", None)
 
     # ------------------------------------------------------------ fleet --
     def add_instance(self, inst: DecodeInstanceSim, now: float = 0.0) -> None:
         assert inst.inst_id not in self.instances
         self.instances[inst.inst_id] = inst
-        self._prefill_free[inst.inst_id] = now
+        self.placement.on_add_instance(inst, now, self)
 
     def retire(self, inst_id: int) -> None:
         """Decommission a drained instance: it leaves the active fleet (no
@@ -178,7 +198,7 @@ class ClusterRouter:
         accounting — its served requests and finetune progress happened."""
         inst = self.instances.pop(inst_id)
         assert inst.drained, "retiring an instance that still holds work"
-        self._prefill_free.pop(inst_id, None)
+        self.placement.on_retire_instance(inst_id, self)
         self.retired[inst_id] = inst
 
     def all_instances(self) -> List[DecodeInstanceSim]:
@@ -191,76 +211,8 @@ class ClusterRouter:
                 if i.serves_inference and i.role != "finetune"
                 and not i.draining]
 
-    # --------------------------------------------------------- policies --
-    def _least_loaded(self, cand: List[DecodeInstanceSim]
-                      ) -> DecodeInstanceSim:
-        # join-shortest-queue on the occupancy signal; ties broken by
-        # instance id for determinism
-        return min(cand, key=lambda i: (i.load(), i.inst_id))
-
-    def _predicted_tpot(self, inst: DecodeInstanceSim, req: Request
-                        ) -> float:
-        """Predicted decode-round latency (== TPOT) on `inst` with `req`
-        added, at the instance's current batch and finetune quantum."""
-        bs = min(inst.queue_depth + 1, inst.sim.max_slots)
-        if inst.active:
-            ctx = sum(r.context_len for r in inst.active) / len(inst.active)
-        else:
-            ctx = float(req.prompt_len)
-        q_ft = 0.0
-        if inst.role == "colocated" and inst.quantum_timeline:
-            q_ft = inst.quantum_timeline[-1][1] / max(inst.sim.k_max, 1)
-        return self.predictor.predict_colo(q_ft, bs, ctx)
-
-    def _predicted_delay(self, inst: DecodeInstanceSim, req: Request
-                         ) -> float:
-        """Routing score: predicted TPOT, plus the admission wait the
-        request would pay when the instance's queue spills past its slot
-        budget. Decode is memory-bound, so TPOT alone is nearly flat in
-        batch size — without the wait term a saturated instance looks as
-        cheap as an idle one and the policy piles onto it."""
-        tpot = self._predicted_tpot(inst, req)
-        slots = max(inst.sim.max_slots, 1)
-        excess = inst.queue_depth + 1 - slots
-        if excess <= 0:
-            return tpot
-        # each slot-budget overflow "wave" waits a full request residency
-        # (remaining tokens at this round's predicted TPOT)
-        rem = [r.max_new_tokens - r.generated for r in inst.active]
-        mean_rem = (sum(rem) / len(rem)) if rem else req.max_new_tokens
-        waves = math.ceil(excess / slots)
-        return tpot * (1.0 + waves * max(mean_rem, 1.0))
-
-    def _pick_target(self, cand: List[DecodeInstanceSim],
-                     req: Optional[Request] = None) -> DecodeInstanceSim:
-        policy = self.cfg.policy
-        if policy == "round_robin":
-            pick = cand[self._rr_cursor % len(cand)]
-            self._rr_cursor += 1
-            return pick
-        if policy == "random":
-            return cand[int(self._rng.integers(len(cand)))]
-        if policy == "predicted_latency" and self.predictor is not None \
-                and req is not None:
-            return min(cand,
-                       key=lambda i: (self._predicted_delay(i, req),
-                                      i.inst_id))
-        if policy == "session_affinity" and req is not None \
-                and req.session_id >= 0:
-            sticky = self._session_map.get(req.session_id)
-            if sticky is not None:
-                inst = self.instances.get(sticky)
-                if inst is not None and inst in cand and \
-                        inst.load() <= self.cfg.affinity_overflow_load:
-                    return inst
-            # first touch, sticky gone, or overflow: remap the session to
-            # the least-loaded instance (the prefix cache moves with it)
-            pick = self._least_loaded(cand)
-            self._session_map[req.session_id] = pick.inst_id
-            return pick
-        return self._least_loaded(cand)
-
-    def _credit_prefix(self, inst: DecodeInstanceSim, req: Request) -> None:
+    # --------------------------------------------------------- dispatch --
+    def credit_prefix(self, inst: DecodeInstanceSim, req: Request) -> None:
         """Consult the chosen instance's session prefix cache and shorten
         the request's effective prefill by the cached prefix. Must run
         before any prefill latency is charged."""
@@ -268,66 +220,25 @@ class ClusterRouter:
             req.cache_hit_tokens = inst.prefix_cache.lookup(
                 req.session_id, req.prompt_len)
 
-    # --------------------------------------------------------- dispatch --
     def dispatch(self, req: Request, now: float) -> int:
-        """Admit one request. Pooled mode: returns PENDING (-2) and the
-        request enters the prefill queue, or REJECTED (-1) under global
-        saturation. Chained mode: routes through the chosen instance's
-        serialized prefill chain immediately. Chunked mode: places the
-        request on a decode instance whose own rounds will run the prefill
-        in chunks. Exactly-once by construction."""
+        """Admit one request and hand it to the prefill placement.
+        Returns the decode instance id, PENDING (-2) when the request
+        entered a prefill stage, or REJECTED (-1) under global
+        saturation. Exactly-once by construction."""
         assert req.rid not in self._assigned, "request routed twice"
         # admission rejects only under GLOBAL saturation: an instance past
-        # reject_load is skipped as long as any other can still absorb
+        # reject_load is skipped as long as any other can still absorb;
+        # the placement may add its own tier's backpressure on top
         cand = [i for i in self.serving_instances()
                 if i.load() <= self.cfg.reject_load]
-        if not cand:
+        if not cand or self.placement.saturated(cand, self):
             self._assigned[req.rid] = REJECTED
             self._record(req, REJECTED)
             return REJECTED
-        if self.pool is not None:
-            # prefill-tier backpressure: in pool mode decode load() only
-            # rises after prefill, so saturation must also be read off the
-            # pool queue — the same per-serving-instance bound reject_load
-            # puts on a decode queue, applied fleet-wide
-            limit = self.cfg.reject_load * cand[0].sim.max_slots \
-                * len(self.serving_instances())
-            if self.pool.queue_depth >= limit:
-                self._assigned[req.rid] = REJECTED
-                self._record(req, REJECTED)
-                return REJECTED
-            if self.cfg.policy == "session_affinity" and req.session_id >= 0:
-                # the cache can only shorten prefill if the decode target
-                # is known BEFORE the pool runs it: pin the session's
-                # sticky instance now and honor the pin at hand-off
-                inst = self._pick_target(cand, req)
-                self._credit_prefix(inst, req)
-                self._pinned[req.rid] = inst.inst_id
-            self.pool.submit(req, now)
-            self._assigned[req.rid] = PENDING
-            self._record(req, PENDING)
-            return PENDING
-        inst = self._pick_target(cand, req)
-        self._credit_prefix(inst, req)
-        if self.mode == "chunked":
-            # no prefill tier: the instance itself chunks the prefill into
-            # its decode rounds; load()/queue_depth include the chunk queue
-            # so admission backpressure keeps working
-            inst.enqueue_chunked(req, now)
-            self._assigned[req.rid] = inst.inst_id
-            self._record(req, inst.inst_id)
-            return inst.inst_id
-        # chained (PR 1) path: prefill serialized on the chosen instance's
-        # prefill partner, then decode admission takes over
-        t_start = max(self._prefill_free[inst.inst_id], req.arrival, now)
-        ready = t_start + self.prefill_cm.prefill_latency(
-            req.effective_prompt_len)
-        self._prefill_free[inst.inst_id] = ready
-        req.prefill_done = ready
-        inst.enqueue(req, ready)
-        self._assigned[req.rid] = inst.inst_id
-        self._record(req, inst.inst_id)
-        return inst.inst_id
+        target = self.placement.place(req, now, cand, self)
+        self._assigned[req.rid] = target
+        self._record(req, target)
+        return target
 
     def _record(self, req: Request, instance: int) -> None:
         rr = RoutedRequest(req.rid, instance, req.arrival)
@@ -339,15 +250,9 @@ class ClusterRouter:
         prefill to a decode instance chosen by the routing policy (at
         hand-off time, so the decision sees current fleet state). Returns
         the number of requests handed to the decode stage."""
-        if self.pool is None:
-            return 0
-        handed = 0
-        for req, ready in self.pool.pump(until):
-            self._dispatch_decode(req, ready)
-            handed += 1
-        return handed
+        return self.placement.pump(until, self)
 
-    def _dispatch_decode(self, req: Request, ready: float) -> int:
+    def dispatch_decode(self, req: Request, ready: float) -> int:
         """Decode-stage placement of a prefilled request. Placement always
         succeeds (the request already paid its prefill): saturated
         candidates are preferred in policy order, then any serving
@@ -360,10 +265,10 @@ class ClusterRouter:
             cand = [i for i in self.instances.values()
                     if i.serves_inference and i.role != "finetune"]
         assert cand, "no inference-capable instance left in the fleet"
-        pin = self._pinned.pop(req.rid, None)
+        pin = self.policy.claim_pin(req)
         inst = None
         if pin is not None:
-            # session pinned at admission (its prefix-cache credit already
+            # instance pinned at admission (its prefix-cache credit already
             # shortened the prefill): honor the pin while the instance can
             # still take traffic; fall back to the policy if it left
             pinned = self.instances.get(pin)
@@ -380,7 +285,7 @@ class ClusterRouter:
                     granter.prefix_cache.revoke(req.cache_hit_tokens)
                 req.cache_hit_tokens = 0
         if inst is None:
-            inst = self._pick_target(cand, req)
+            inst = self.policy.pick(cand, req, self)
         inst.enqueue(req, ready)
         self._assigned[req.rid] = inst.inst_id
         self._routed_ix[req.rid].instance = inst.inst_id

@@ -89,6 +89,12 @@ class ChunkedPrefillConfig:
     # admitting chunks at the priced limit doesn't push per-request TPOT
     # p99 over the SLO (which carries only tpot_slack=5% of slack)
     qos_margin: float = 0.85
+    # fuse a REDUCED finetune quantum into chunk-carrying rounds when the
+    # predictor says quantum + chunk together still fit the round budget
+    # (``predict_mixed(k/k_max, ...) <= qos_margin * TPOT-SLO``), instead
+    # of forcing quantum 0 on every chunk round. Default off: the original
+    # inference-preempts-finetune behaviour (§2.3) is the pinned baseline
+    fuse_quantum: bool = False
 
 
 # ---------------------------------------------------------------- finetune
@@ -399,6 +405,39 @@ class DecodeInstanceSim:
         return d.k
 
     # -- chunked prefill --------------------------------------------------
+    def _fused_chunk_k(self, bs: int, ctx: float, chunk_tokens: int,
+                       takes: List[Tuple[Request, int]]) -> int:
+        """Finetune quantum to fuse into a chunk-carrying round. 0 unless
+        ``ChunkedPrefillConfig.fuse_quantum`` is on AND the predictor's
+        fused mixed stage (fit over q_ft>0 rounds, ``fit_mixed_fused``)
+        prices a reduced quantum + the chunk as jointly fitting
+        ``qos_margin * TPOT-SLO`` — then the largest such quantum runs
+        alongside the chunk instead of being preempted outright."""
+        if not self.chunked.fuse_quantum or not self.colocate \
+                or self.role != "colocated" or self.sched is None \
+                or self.predictor is None \
+                or self.predictor.mixed_fused_coef is None \
+                or self.straggler.suppress_quantum:
+            return 0
+        # TTFT guard: fuse only when this round's chunk drains the whole
+        # arrived prefill queue. Under backlog every extra round-ms delays
+        # queued first tokens (inference > finetune, §2.3) — the fused
+        # quantum harvests rounds whose chunk work is the queue's tail
+        covered = {r.rid: tok for r, tok in takes}
+        for arr, _, r in self._chunk_pending:
+            if arr > self.t:
+                continue
+            if r.effective_prompt_len - r.prefilled_tokens \
+                    - covered.get(r.rid, 0) > 0:
+                return 0
+        avail = self.ft.units_available(self.t, self.sim.k_max)
+        limit = self.sim.qos_s * self.chunked.qos_margin
+        for k in range(min(avail, self.sim.k_max), 0, -1):
+            if self.predictor.predict_mixed_fused(
+                    k / self.sim.k_max, bs, ctx, chunk_tokens) <= limit:
+                return k
+        return 0
+
     def _chunk_qos_cap(self, bs: int, ctx: float, chunk_ctx: float) -> int:
         """Largest chunk this round may carry without the predicted round
         latency breaking the TPOT target — the prediction-driven admission
@@ -582,12 +621,18 @@ class DecodeInstanceSim:
             self._select_chunk(bs, ctx) if chunk_ready else (0, 0.0, []))
         if chunk_tokens > 0:
             # the round carries a prefill chunk: inference work preempts
-            # finetune (§2.3), so the quantum is 0 and the chunk's TPOT
-            # impact was priced by _chunk_qos_cap before admission
-            k = 0
-            lat = cm.mixed_round_latency(bs, ctx, chunk_tokens, chunk_ctx)
-            expected = cm.mixed_round_latency(bs, ctx, chunk_tokens,
-                                              chunk_ctx, noisy=False)
+            # finetune (§2.3), so the quantum is 0 — unless fuse_quantum
+            # is on and the predictor prices a reduced quantum + the
+            # chunk as jointly fitting the round budget. The chunk's own
+            # TPOT impact was priced by _chunk_qos_cap before admission.
+            k = self._fused_chunk_k(bs, ctx, chunk_tokens, takes)
+            lat = cm.mixed_round_latency(
+                bs, ctx, chunk_tokens, chunk_ctx, k_units=k,
+                micro_batch=sim.micro_batch, seq_len=sim.ft_seq)
+            expected = cm.mixed_round_latency(
+                bs, ctx, chunk_tokens, chunk_ctx, k_units=k,
+                micro_batch=sim.micro_batch, seq_len=sim.ft_seq,
+                noisy=False)
         else:
             k = self._pick_k(self.t, bs, ctx)
             if k > 0:

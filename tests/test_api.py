@@ -1,0 +1,394 @@
+"""Control-plane API (PR 5): policy registry, ExperimentSpec, back-compat
+shims, the cache_aware routing plugin and the fused finetune quantum.
+
+Covers: registry registration / unknown-name error text / duplicate
+rejection / end-to-end pluggability of a test-local policy;
+ExperimentSpec JSON round-trip determinism (same JSON -> seed-identical
+run); the contradictory-flag validation (satellite bugfix); a regression
+pinning the legacy string-kwarg construction bit-identical to the
+spec-driven path for one scenario per prefill mode; heterogeneous
+per-instance overrides; cache_aware beating session_affinity on TTFT p99
+in the session_heavy scenario at equal goodput; and the fused-quantum
+flag raising finetune throughput inside the TPOT SLO (default off)."""
+
+import dataclasses
+import glob
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import api
+from repro.core.api import (ExperimentSpec, PolicyNotFoundError, SpecError,
+                            RoutingPolicy, available_policies,
+                            register_policy, resolve_policy)
+from repro.core.cluster import ClusterConfig, ClusterSim, simulate_cluster
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.prefix_cache import PrefixCacheConfig
+from repro.core.router import RouterConfig
+from repro.core.simulator import ChunkedPrefillConfig, SimConfig
+from repro.serving.trace import generate_scenario
+
+LLAMA = get_config("llama3-8b")
+SPEC_DIR = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "specs")
+
+
+# ------------------------------------------------------------- registry --
+def test_registry_lists_builtins():
+    assert set(available_policies("routing")) >= {
+        "least_loaded", "round_robin", "random", "predicted_latency",
+        "session_affinity", "cache_aware"}
+    assert set(available_policies("prefill")) == {
+        "chained", "pooled", "chunked"}
+    assert set(available_policies("scaling")) == {
+        "decode_fleet", "pooled_prefill", "chunked_budget"}
+
+
+def test_registry_unknown_name_error_text():
+    """The error must name the kind, the bad name, and what IS registered
+    — a typo'd spec run fails with the fix in the message."""
+    with pytest.raises(PolicyNotFoundError) as ei:
+        resolve_policy("routing", "least_loadedd")
+    msg = str(ei.value)
+    assert "unknown routing policy 'least_loadedd'" in msg
+    assert "least_loaded" in msg and "cache_aware" in msg
+    with pytest.raises(PolicyNotFoundError):
+        resolve_policy("prefill", "pool")
+
+
+def test_registry_rejects_duplicate_name():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy("least_loaded")
+        class Impostor(RoutingPolicy):       # noqa: F811
+            def pick(self, cand, req, router):
+                return cand[0]
+
+
+def test_registry_infers_kind_or_rejects():
+    with pytest.raises(TypeError, match="subclasses none"):
+        @register_policy("not_a_policy")
+        class Plain:
+            pass
+
+
+def test_custom_policy_plugs_in_end_to_end():
+    """A policy registered through the public decorator is reachable by
+    name from RouterConfig with zero router edits — the API contract
+    cache_aware relies on."""
+    name = "test_always_highest_id"
+    if name not in available_policies("routing"):
+        @register_policy(name)
+        class HighestId(RoutingPolicy):
+            def pick(self, cand, req, router):
+                return max(cand, key=lambda i: i.inst_id)
+
+    reqs = generate_scenario("steady", 10.0, 6.0, seed=1)
+    res = simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=2),
+        ClusterConfig(n_initial=2, autoscale=False, prefill_mode="chained",
+                      prefill=None, router=RouterConfig(policy=name)))
+    assert res.stats.completed > 0
+    assert res.stats.routed + res.stats.rejected == res.stats.offered
+
+
+def test_unknown_policy_fails_at_construction():
+    with pytest.raises(PolicyNotFoundError):
+        simulate_cluster(
+            LLAMA, LLAMA, [], SimConfig(mode="harli", seed=2),
+            ClusterConfig(router=RouterConfig(policy="no_such_policy")))
+
+
+# ------------------------------------------------------- ExperimentSpec --
+def _spec(mode="pooled", policy="least_loaded", duration=12.0, rps=8.0,
+          scenario="spike", sessions=0, cache=None, **cluster_kw):
+    kw = dict(prefill_mode=mode, prefill=None)
+    if mode == "pooled":
+        kw["prefill"] = PrefillPoolConfig()
+    kw.update(cluster_kw)
+    return ExperimentSpec(
+        name=f"test_{mode}_{policy}", scenario=scenario,
+        duration_s=duration, mean_rps=rps, n_sessions=sessions, seed=1,
+        sim=SimConfig(mode="harli", seed=2),
+        cluster=ClusterConfig(n_initial=2, router=RouterConfig(policy=policy),
+                              prefix_cache=cache, **kw))
+
+
+@pytest.mark.parametrize("mode", ["chained", "pooled", "chunked"])
+def test_spec_json_round_trip_equality(mode):
+    s = _spec(mode, sessions=6, cache=PrefixCacheConfig())
+    s2 = ExperimentSpec.from_json(s.to_json())
+    assert s2 == s
+    # and again through a dict (tuples restored, nested optionals intact)
+    assert ExperimentSpec.from_dict(s2.to_dict()) == s
+
+
+def test_spec_json_round_trip_run_is_seed_identical():
+    """from_json(to_json(s)).run() must be bit-identical to s.run() — the
+    spec file IS the experiment."""
+    s = _spec("pooled", "session_affinity", sessions=8,
+              cache=PrefixCacheConfig())
+    a = s.run()
+    b = ExperimentSpec.from_json(s.to_json()).run()
+    assert a.stats == b.stats
+    assert a.ft_iterations == b.ft_iterations
+    assert (a.prefix_hits, a.prefix_misses) == (b.prefix_hits,
+                                                b.prefix_misses)
+
+
+def test_spec_rejects_unknown_fields_with_valid_names():
+    with pytest.raises(SpecError, match="unknown ExperimentSpec field"):
+        ExperimentSpec.from_json('{"nam": "typo"}')
+    with pytest.raises(SpecError, match="unknown SimConfig field"):
+        ExperimentSpec.from_json('{"sim": {"qos": 0.04}}')
+
+
+def test_spec_validation_catches_contradictions():
+    """The satellite bugfix: contradictory knob combinations error loudly
+    instead of being silently ignored (centralized in validate())."""
+    # pooled mode without a pool config
+    with pytest.raises(SpecError, match="needs a prefill pool config"):
+        _spec("pooled", prefill=None).validate()
+    # a configured pool outside pooled mode (--prefill-workers + chained)
+    with pytest.raises(SpecError, match="only exists in pooled mode"):
+        _spec("chained",
+              prefill=PrefillPoolConfig(n_workers=4)).validate()
+    # chunked knobs outside chunked mode (--chunk-budget + pooled)
+    with pytest.raises(SpecError, match="only apply in chunked mode"):
+        _spec("pooled",
+              chunked=ChunkedPrefillConfig(budget_tokens=512)).validate()
+    # unknown names surface the registry error
+    with pytest.raises(SpecError, match="unknown routing policy"):
+        _spec("pooled", policy="least_loadedd").validate()
+    with pytest.raises(SpecError, match="unknown scenario"):
+        _spec("pooled", scenario="spikey").validate()
+    # non-overridable per-instance fields
+    with pytest.raises(SpecError, match="non-overridable"):
+        _spec("chained",
+              instance_overrides=({"seed": 3},)).validate()
+    # a full trace override must be mirrored by the top-level trace-shape
+    # fields (they feed reports/duration scaling; disagreement would be a
+    # silently ignored knob)
+    from repro.serving.trace import TraceConfig
+    with pytest.raises(SpecError, match="disagrees with trace.duration_s"):
+        dataclasses.replace(
+            _spec("chained"), duration_s=99.0,
+            trace=TraceConfig(duration_s=12.0, mean_rps=8.0)).validate()
+    # the defaults themselves are fine in every mode
+    for mode in ("chained", "pooled", "chunked"):
+        _spec(mode).validate()
+
+
+def test_cli_rejects_contradictory_and_overridden_flags():
+    """The CLI must reject mode-gated flags even when their value equals
+    the config default (--prefill-workers 2 with chained mode), and any
+    experiment flag next to --spec — both were silently ignored before
+    PR 5."""
+    import subprocess
+    import sys
+    example = os.path.join(os.path.dirname(__file__), "..", "examples",
+                           "cluster_sim.py")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+
+    def run(*flags):
+        return subprocess.run([sys.executable, example, *flags],
+                              capture_output=True, text=True, env=env)
+
+    r = run("--prefill-workers", "2", "--prefill-mode", "chained")
+    assert r.returncode != 0
+    assert "--prefill-workers only applies" in r.stderr
+    r = run("--chunk-budget", "256")          # default value, pooled mode
+    assert r.returncode != 0
+    assert "--chunk-budget only applies" in r.stderr
+    r = run("--fuse-quantum", "--prefill-mode", "pooled")
+    assert r.returncode != 0
+    assert "--fuse-quantum only applies" in r.stderr
+    r = run("--spec", os.path.join(SPEC_DIR, "spike_pooled.json"),
+            "--policy", "session_affinity")
+    assert r.returncode != 0
+    assert "runs the file as-is" in r.stderr and "--policy" in r.stderr
+
+
+def test_committed_spec_files_validate():
+    paths = sorted(glob.glob(os.path.join(SPEC_DIR, "*.json")))
+    assert len(paths) >= 4, "canonical examples/specs/*.json set missing"
+    for p in paths:
+        ExperimentSpec.load(p).validate()
+
+
+# ----------------------------------------------- back-compat regression --
+@pytest.mark.parametrize("mode,policy", [
+    ("chained", "least_loaded"),
+    ("pooled", "session_affinity"),
+    ("chunked", "predicted_latency"),
+])
+def test_legacy_kwargs_bit_identical_to_spec(mode, policy):
+    """The deprecation shims: constructing the experiment the pre-registry
+    way (string kwargs into simulate_cluster) is bit-identical to the
+    spec-driven path, one scenario per prefill mode."""
+    spec = _spec(mode, policy, duration=15.0, sessions=8,
+                 cache=PrefixCacheConfig())
+    via_spec = spec.run()
+    reqs = generate_scenario(spec.scenario, spec.duration_s, spec.mean_rps,
+                             seed=spec.seed + 1,
+                             n_sessions=spec.n_sessions)
+    via_kwargs = simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode="harli", seed=2),
+        ClusterConfig(n_initial=2, prefill_mode=mode,
+                      prefill=PrefillPoolConfig() if mode == "pooled"
+                      else None,
+                      router=RouterConfig(policy=policy),
+                      prefix_cache=PrefixCacheConfig()))
+    assert via_spec.stats == via_kwargs.stats
+    assert via_spec.ft_iterations == via_kwargs.ft_iterations
+    assert via_spec.chunk_budget_timeline == via_kwargs.chunk_budget_timeline
+    assert [(d.t, d.action, d.target) for d in via_spec.decisions] == \
+        [(d.t, d.action, d.target) for d in via_kwargs.decisions]
+
+
+def test_legacy_router_pool_kwarg_still_constructs():
+    """ClusterRouter(prefill_pool=...) (the PR 3 calling convention) still
+    builds the pooled placement, and router.pool still reads it."""
+    from repro.core.costmodel import CostModel, InstanceSpec
+    from repro.core.prefill_pool import PrefillPool
+    from repro.core.router import ClusterRouter
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=7)
+    pool = PrefillPool(PrefillPoolConfig(), cm)
+    r = ClusterRouter(RouterConfig(), cm, prefill_pool=pool)
+    assert r.mode == "pooled" and r.pool is pool
+    chain = ClusterRouter(RouterConfig(), cm)
+    assert chain.mode == "chained" and chain.pool is None
+    with pytest.raises(AssertionError):
+        ClusterRouter(RouterConfig(), cm, prefill_pool=pool, mode="chained")
+
+
+# --------------------------------------------- heterogeneous overrides --
+def test_instance_overrides_build_heterogeneous_fleet():
+    spec = _spec("chained", duration=8.0, rps=5.0, scenario="steady",
+                 instance_overrides=({"tp": 4, "max_slots": 32}, {}))
+    spec.validate()
+    cs = ClusterSim(LLAMA, LLAMA, spec.sim, spec.cluster)
+    by_id = {i.inst_id: i for i in cs.router.instances.values()}
+    assert by_id[0].sim.tp == 4 and by_id[0].sim.max_slots == 32
+    assert by_id[1].sim.tp == spec.sim.tp
+    res = cs.run(spec.requests(), spec.duration_s)
+    assert res.stats.completed > 0
+    assert res.stats.routed + res.stats.rejected == res.stats.offered
+
+
+# ------------------------------------------------- cache_aware routing --
+def _cache_spec(policy, seed=1):
+    return ExperimentSpec(
+        name=f"cache_{policy}", scenario="session_heavy", duration_s=40.0,
+        mean_rps=14.0, n_sessions=24, seed=seed,
+        sim=SimConfig(mode="harli", seed=seed + 1, max_slots=32),
+        cluster=ClusterConfig(
+            n_initial=3, autoscale=False, prefill_mode="pooled",
+            prefill=PrefillPoolConfig(),
+            router=RouterConfig(policy=policy),
+            prefix_cache=PrefixCacheConfig(chunks=16)))
+
+
+def test_cache_aware_beats_session_affinity_ttft_p99():
+    """Acceptance: on the session_heavy scenario, cache_aware routing —
+    registered purely through the public API — beats session_affinity on
+    TTFT p99 at equal goodput. The sticky map is load-blind; the plugin
+    reads every instance's PrefixCache and trades cached-prefix savings
+    against queue depth continuously."""
+    aware = _cache_spec("cache_aware").run()
+    sticky = _cache_spec("session_affinity").run()
+    assert aware.prefix_hits > 0
+    assert aware.stats.ttft_p99 < sticky.stats.ttft_p99, \
+        (aware.stats.ttft_p99, sticky.stats.ttft_p99)
+    assert aware.stats.goodput >= sticky.stats.goodput
+    # and it keeps (or beats) the sticky policy's cache efficiency
+    assert aware.prefix_hits >= 0.9 * sticky.prefix_hits
+
+
+def test_cache_aware_deterministic_and_conserving():
+    a = _cache_spec("cache_aware").run()
+    b = _cache_spec("cache_aware").run()
+    assert a.stats == b.stats
+    assert (a.prefix_hits, a.prefix_misses, a.prefix_hit_tokens) == \
+        (b.prefix_hits, b.prefix_misses, b.prefix_hit_tokens)
+    assert a.stats.routed + a.stats.rejected == a.stats.offered
+
+
+def test_cache_aware_sessionless_falls_back_to_least_loaded():
+    """Without session ids the plugin must degrade gracefully (no cache
+    to read) and still conserve requests in every mode."""
+    for mode in ("chained", "pooled", "chunked"):
+        res = _spec(mode, "cache_aware", duration=10.0).run()
+        s = res.stats
+        assert s.completed > 0
+        assert s.routed + s.rejected == s.offered
+
+
+def test_prefix_cache_peek_matches_lookup_without_mutation():
+    from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+    from repro.core.prefix_cache import PrefixCache
+    alloc = UnifiedAllocator(AllocatorConfig(
+        total_bytes=8 * 2 ** 30, n_layers=32, kv_bytes_per_token=131072,
+        max_bs=64, qos_s=0.04, swap_time_s=0.002))
+    cache = PrefixCache(PrefixCacheConfig(chunks=2, min_hit_tokens=8),
+                        alloc)
+    cache.insert(1, 500)
+    before = dataclasses.replace(cache.stats)
+    assert cache.peek(1, 400) == 399        # min(cached, prompt-1)
+    assert cache.peek(1, 1000) == 500
+    assert cache.peek(2, 400) == 0          # miss
+    assert cache.peek(1, 4) == 0            # under min_hit_tokens
+    assert cache.stats == before, "peek mutated stats"
+    assert cache.peek(1, 400) == cache.lookup(1, 400)
+
+
+# ---------------------------------------------- fused finetune quantum --
+def _fused_spec(fuse):
+    from repro.serving.trace import TraceConfig
+    return ExperimentSpec(
+        name="fused", duration_s=40.0, mean_rps=5.0, seed=0,
+        trace=TraceConfig(duration_s=40.0, mean_rps=5.0, burstiness=1.0,
+                          rate_amplitude=0.05, prompt_median=1024,
+                          output_median=128, seed=1),
+        sim=SimConfig(mode="harli", seed=2),
+        cluster=ClusterConfig(
+            n_initial=2, autoscale=False, prefill_mode="chunked",
+            prefill=None,
+            chunked=ChunkedPrefillConfig(fuse_quantum=fuse,
+                                         budget_tokens=512),
+            router=RouterConfig()))
+
+
+def test_fused_quantum_raises_ft_throughput_within_slo():
+    """Satellite: with fuse_quantum on, chunk-carrying rounds run a
+    reduced finetune quantum when the fused predictor stage prices both
+    as fitting — finetune throughput rises on a prefill-heavy trace
+    while TPOT p99 stays inside the SLO and goodput is untouched (the
+    backlog guard keeps fused rounds off the TTFT critical path).
+    Default off."""
+    assert ChunkedPrefillConfig().fuse_quantum is False
+    off = _fused_spec(False).run()
+    on = _fused_spec(True).run()
+    rcfg = RouterConfig()
+    lim = rcfg.tpot_slo_s * rcfg.tpot_slack
+    assert on.ft_throughput > off.ft_throughput, \
+        (on.ft_throughput, off.ft_throughput)
+    assert on.stats.tpot_p99 <= lim, on.stats.tpot_p99
+    assert on.stats.goodput >= 0.99 * off.stats.goodput
+
+
+def test_fused_quantum_rounds_record_nonzero_k():
+    """The fused rounds are visible in the quantum timeline: chunk rounds
+    (which force k=0 without the flag) carry k>0 with it."""
+    spec = _fused_spec(True)
+    cs = ClusterSim(LLAMA, LLAMA, spec.sim, spec.cluster)
+    cs.run(spec.requests(), spec.duration_s)
+    fused = 0
+    for inst in cs.router.all_instances():
+        chunk_starts = {round(t, 9) for t, _, _ in inst.chunk_timeline}
+        for t_end, k, lat, bs in inst.quantum_timeline:
+            if k > 0 and bs > 0 and round(t_end - lat, 9) in chunk_starts:
+                fused += 1
+    assert fused > 0, "no chunk-carrying round ever fused a quantum"
