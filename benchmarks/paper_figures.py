@@ -567,10 +567,120 @@ def cluster_cache_aware(duration_s: float = 60.0):
          f"|win={int(aware.ttft_p99 < sticky.ttft_p99 and aware.goodput >= sticky.goodput)}")
 
 
+# Beyond-paper: goodput under churn — the failure/preemption layer
+# (serving/trace.py FailureSchedule + ClusterSim._apply_failures). Sweep
+# the seeded Poisson kill rate and compare harli co-location against the
+# separate fleet on goodput and tail latency while instances die
+# mid-epoch: in-flight decodes lose their KV and re-prefill through the
+# router, pooled prefill batches requeue, the autoscaler replaces
+# capacity, and colocated finetune jobs roll back to their last
+# checkpoint commit. Rate 0 runs failures=None — the stable-fleet path —
+# so the sweep's origin is bit-identical to every other cluster figure.
+def cluster_churn(duration_s: float = 90.0):
+    import os
+
+    from repro.core.api import ExperimentSpec
+    from repro.core.cluster import ClusterConfig
+    from repro.core.prefill_pool import PrefillPoolConfig
+    from repro.core.router import RouterConfig
+    from repro.serving.trace import FailureConfig
+
+    rcfg = RouterConfig()
+    rates = (0.0, 0.5, 1.0, 2.0, 4.0)
+    out = {}
+    for rate in rates:
+        failures = None if rate == 0 else FailureConfig(
+            rate_per_min=rate, warning_s=5.0,
+            checkpoint_interval_s=15.0, seed=9)
+        for sim_mode in ("harli", "separate"):
+            t0 = time.time()
+            res = ExperimentSpec(
+                name=f"cluster_churn_{sim_mode}_{rate:g}",
+                scenario="steady", duration_s=duration_s, mean_rps=10.0,
+                seed=40, sim=SimConfig(mode=sim_mode, seed=42),
+                cluster=ClusterConfig(
+                    n_initial=3, router=rcfg, prefill_mode="pooled",
+                    prefill=PrefillPoolConfig(),
+                    failures=failures)).run()
+            out[(sim_mode, rate)] = res
+            s = res.stats
+            _row(f"cluster_churn,{sim_mode},rate{rate:g}",
+                 (time.time() - t0) * 1e6,
+                 f"goodput={s.goodput:.2f}|thr={s.throughput:.2f}"
+                 f"|attain={s.slo_attainment:.3f}"
+                 f"|ttft_p99={s.ttft_p99:.2f}"
+                 f"|tpot_p99_ms={s.tpot_p99*1e3:.1f}"
+                 f"|kills={res.failures}|warned={res.preemptions}"
+                 f"|requeued={res.requeued_requests}"
+                 f"|requeue_rejected={res.requeue_rejected}"
+                 f"|ft={res.ft_throughput:.2f}"
+                 f"|ft_lost_iters={res.ft_lost_iterations:.1f}"
+                 f"|ckpt_commits={res.checkpoint_commits}")
+    for rate in rates[1:]:
+        h = out[("harli", rate)]
+        s = out[("separate", rate)]
+        _row(f"cluster_churn.summary,rate{rate:g}", 0,
+             f"goodput_ratio="
+             f"{h.stats.goodput/max(s.stats.goodput, 1e-9):.2f}x"
+             f"|ft_ratio={h.ft_throughput/max(s.ft_throughput, 1e-9):.2f}x")
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        _row("cluster_churn.png", 0, "skipped_no_matplotlib")
+        return
+
+    C = {"harli": "#2a78d6", "separate": "#eb6834", "ink": "#0b0b0b",
+         "ink2": "#52514e", "grid": "#e4e3df", "surface": "#fcfcfb",
+         "slo": "#b3261e"}
+    tpot_limit_ms = rcfg.tpot_slo_s * rcfg.tpot_slack * 1e3
+    panels = [
+        ("goodput (req/s)", lambda r: r.stats.goodput, None),
+        ("TTFT p99 (s)", lambda r: r.stats.ttft_p99, rcfg.ttft_slo_s),
+        ("TPOT p99 (ms)", lambda r: r.stats.tpot_p99 * 1e3,
+         tpot_limit_ms),
+        # not ft_lost_iterations: with warnings on, preemption notices
+        # checkpoint before dying, so iters lost stays ~0 — the churn
+        # cost lands on finetune throughput (rollback + commit stalls +
+        # respawned instances warming up)
+        ("finetune iters/s x batch", lambda r: r.ft_throughput, None),
+    ]
+    fig, axes = plt.subplots(1, 4, figsize=(10.8, 3.1),
+                             facecolor=C["surface"])
+    for ax, (title, get, slo) in zip(axes, panels):
+        for sim_mode in ("harli", "separate"):
+            ax.plot(rates, [get(out[(sim_mode, r)]) for r in rates],
+                    marker="o", ms=3.5, lw=1.4, color=C[sim_mode],
+                    label=sim_mode)
+        if slo is not None:
+            ax.axhline(slo, color=C["slo"], lw=1.1, ls="--")
+        ax.set_title(title, fontsize=9.5, color=C["ink"])
+        ax.set_xlabel("kills / min", fontsize=8.5, color=C["ink2"])
+        ax.set_facecolor(C["surface"])
+        ax.grid(color=C["grid"], lw=0.6)
+        ax.set_axisbelow(True)
+        ax.tick_params(labelsize=8, colors=C["ink2"])
+        for sp in ax.spines.values():
+            sp.set_color(C["grid"])
+    axes[0].legend(fontsize=8, frameon=False)
+    fig.suptitle("Goodput under churn (steady scenario, pooled prefill, "
+                 "seeded Poisson kills + 5s preemption warnings)",
+                 fontsize=10.5, color=C["ink"])
+    fig.tight_layout()
+    out_dir = os.path.join(os.path.dirname(__file__), "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "cluster_churn.png")
+    fig.savefig(path, dpi=150, facecolor=C["surface"])
+    plt.close(fig)
+    _row("cluster_churn.png", 0, path)
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
        cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes,
-       cluster_cache_aware]
+       cluster_cache_aware, cluster_churn]

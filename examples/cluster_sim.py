@@ -49,7 +49,7 @@ from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
 from repro.core.router import RouterConfig
 from repro.core.simulator import ChunkedPrefillConfig, SimConfig
-from repro.serving.trace import SCENARIOS, peak_rps
+from repro.serving.trace import FailureConfig, SCENARIOS, peak_rps
 
 
 def build_spec(args, ap) -> ExperimentSpec:
@@ -105,6 +105,22 @@ def build_spec(args, ap) -> ExperimentSpec:
         fuse_quantum=args.fuse_quantum)
     cache = PrefixCacheConfig(chunks=args.prefix_cache_chunks) \
         if n_sessions > 0 and args.prefix_cache_chunks > 0 else None
+    if args.churn_rate is None or args.churn_rate <= 0:
+        for flag, val in (("--churn-warning", args.churn_warning),
+                          ("--churn-checkpoint-interval",
+                           args.churn_checkpoint_interval)):
+            if val is not None:
+                ap.error(f"{flag} only applies with --churn-rate > 0 "
+                         "(the fleet is stable without it)")
+        failures = None
+    else:
+        failures = FailureConfig(
+            rate_per_min=args.churn_rate,
+            warning_s=args.churn_warning
+            if args.churn_warning is not None else 0.0,
+            checkpoint_interval_s=args.churn_checkpoint_interval
+            if args.churn_checkpoint_interval is not None else 20.0,
+            seed=args.seed)
     return ExperimentSpec(
         name=f"{args.scenario}_{mode}_{args.policy}",
         inf_model=args.inf, ft_model=args.ft,
@@ -119,6 +135,7 @@ def build_spec(args, ap) -> ExperimentSpec:
             prefill=prefill,
             chunked=chunked,
             prefix_cache=cache,
+            failures=failures,
             router=RouterConfig(policy=args.policy,
                                 ttft_slo_s=args.ttft_slo,
                                 tpot_slo_s=args.qos_ms / 1e3),
@@ -186,6 +203,17 @@ def main():
     ap.add_argument("--ft", default=None)
     ap.add_argument("--qos-ms", type=float, default=None)
     ap.add_argument("--ttft-slo", type=float, default=None)
+    ap.add_argument("--churn-rate", type=float, default=None,
+                    help="instance failures per minute (Poisson, seeded); "
+                         "0 or unset = stable fleet")
+    ap.add_argument("--churn-warning", type=float, default=None,
+                    help="spot-style preemption warning in seconds; 0 = "
+                         "hard kills (requires --churn-rate)")
+    ap.add_argument("--churn-checkpoint-interval", type=float,
+                    default=None,
+                    help="finetune checkpoint cadence in seconds on "
+                         "colocated instances (default 20; requires "
+                         "--churn-rate)")
     ap.add_argument("--no-autoscale", action="store_true")
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args()
@@ -195,7 +223,10 @@ def main():
                     list(CLI_DEFAULTS) + ["prefill_mode",
                                           "prefill_workers",
                                           "prefill_ordering",
-                                          "chunk_budget"]
+                                          "chunk_budget",
+                                          "churn_rate",
+                                          "churn_warning",
+                                          "churn_checkpoint_interval"]
                     if getattr(args, n) is not None]
         explicit += [f"--{n.replace('_', '-')}" for n in
                      ("fuse_quantum", "no_autoscale") if getattr(args, n)]
@@ -221,6 +252,11 @@ def main():
 
     cl = spec.cluster
     cache = cl.prefix_cache
+    churn = ""
+    if cl.failures is not None:
+        churn = f"  churn={cl.failures.rate_per_min:g}/min"
+        if cl.failures.warning_s > 0:
+            churn += f" (warn {cl.failures.warning_s:g}s)"
     probe = spec.requests()
     print(f"spec={spec.name}  scenario={spec.scenario}: {len(probe)} "
           f"requests over {spec.duration_s:.0f}s "
@@ -228,7 +264,7 @@ def main():
           f"peak {peak_rps(probe):.1f} rps)  fleet_0={cl.n_initial}  "
           f"policy={cl.router.policy}  prefill={describe(spec)}  "
           f"prefix_cache={'on' if cache else 'off'}  "
-          f"autoscale={cl.autoscale}")
+          f"autoscale={cl.autoscale}{churn}")
     print(f"SLOs: TTFT<={cl.router.ttft_slo_s:.1f}s "
           f"TPOT<={cl.router.tpot_slo_s*1e3:.0f}ms\n")
 
@@ -246,6 +282,12 @@ def main():
               f"TPOT-attain={s.tpot_attainment*100:5.1f}% "
               f"rejected={s.rejected}  "
               f"QoS-violations={res.qos_violation_frac*100:5.2f}%")
+        if cl.failures is not None:
+            print(f"{'':9s} churn: {res.failures} kills "
+                  f"({res.preemptions} warned), {res.requeued_requests} "
+                  f"requeued ({res.requeue_rejected} rejected), "
+                  f"ft-iters lost {res.ft_lost_iterations:.1f}, "
+                  f"ckpt-commits {res.checkpoint_commits}")
         if mode != "chained":
             print(f"{'':9s} TTFT p99={s.ttft_p99:5.2f}s = "
                   f"queue {s.ttft_queue_p99:.2f} + "

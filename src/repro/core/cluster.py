@@ -45,6 +45,8 @@ Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
 from __future__ import annotations
 
 import dataclasses
+import tempfile
+from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import api
@@ -55,9 +57,11 @@ from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
 from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
 from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
-                                  SimConfig, fit_predictor)
+                                  FinetuneCheckpointer, SimConfig,
+                                  fit_predictor)
 from repro.models.config import ModelConfig
 from repro.serving.request import Request
+from repro.serving.trace import FailureConfig, FailureSchedule
 
 ROUTER_SEED_SALT = 17        # RouterConfig.seed derives from SimConfig.seed
 
@@ -87,6 +91,11 @@ class ClusterConfig:
     # i-th spawned instance (by spawn order; autoscaler spawns past the
     # list use the base SimConfig). Keys are validated by ExperimentSpec.
     instance_overrides: Tuple[Dict, ...] = ()
+    # failure/preemption injection (serving/trace.py): seeded Poisson
+    # instance kills, optional spot-style warnings, finetune checkpoint
+    # cadence. None (default) = stable fleet, bit-identical to the
+    # pre-failure-layer behaviour
+    failures: Optional[FailureConfig] = None
 
     def resolved_mode(self) -> str:
         mode = self.prefill_mode
@@ -124,6 +133,13 @@ class ClusterResult:
     prefix_hits: int = 0
     prefix_misses: int = 0
     prefix_hit_tokens: int = 0
+    # failure layer (ClusterConfig.failures)
+    failures: int = 0                # hard kills applied (instances+workers)
+    preemptions: int = 0             # graceful-drain warnings issued
+    requeued_requests: int = 0       # in-flight requests re-routed off kills
+    requeue_rejected: int = 0        # lost requests no survivor could absorb
+    ft_lost_iterations: float = 0.0  # finetune progress rolled back by kills
+    checkpoint_commits: int = 0
 
 
 class ClusterSim:
@@ -139,9 +155,10 @@ class ClusterSim:
         spec = InstanceSpec(tp=sim.tp)
         self.predictor, _ = fit_predictor(cfg_inf, sim)
         # thread the experiment seed into the router (like the CostModel
-        # seed): an explicit RouterConfig.seed wins, the default derives
+        # seed): an explicit RouterConfig.seed — including 0 — wins, the
+        # None default derives
         rcfg = cluster.router
-        if rcfg.seed == 0:
+        if rcfg.seed is None:
             rcfg = dataclasses.replace(
                 rcfg, seed=sim.seed + ROUTER_SEED_SALT)
         self.router_cfg = rcfg
@@ -156,6 +173,26 @@ class ClusterSim:
         self._next_id = 0
         self._fleet_timeline: List[Tuple[float, int, int]] = []
         self._peak_total = 0
+        # ---- failure layer (ClusterConfig.failures) ---------------------
+        f = cluster.failures
+        self._ckpt_interval = f.checkpoint_interval_s if f is not None \
+            else 0.0
+        self._ckpt_dir: Optional[Path] = None
+        self._ckpt_time_s = 0.0
+        if self._ckpt_interval > 0:
+            if f.checkpoint_dir is not None:
+                self._ckpt_dir = Path(f.checkpoint_dir)
+            else:
+                self._ckpt_tmp = tempfile.TemporaryDirectory(
+                    prefix="repro_ckpt_")
+                self._ckpt_dir = Path(self._ckpt_tmp.name)
+            self._ckpt_time_s = CostModel(cfg_ft, spec).checkpoint_time()
+        self._pending_kills: List[Tuple[float, int]] = []  # (deadline, iid)
+        self._failures = 0
+        self._preemptions = 0
+        self._requeued = 0
+        self._requeue_rejected = 0
+        self._ft_lost_iterations = 0.0
         if sim.mode == "separate":
             for _ in range(max(cluster.n_initial - 1, 1)):
                 self._spawn(0.0, role="decode", colocate=False)
@@ -171,12 +208,20 @@ class ClusterSim:
         overrides = self.cluster.instance_overrides
         if self._next_id < len(overrides) and overrides[self._next_id]:
             sim = dataclasses.replace(sim, **overrides[self._next_id])
+        ckpt = None
+        if colocate and self._ckpt_interval > 0:
+            # failure injection is on: the finetune job commits progress
+            # periodically so a kill rolls back to the last commit
+            ckpt = FinetuneCheckpointer(
+                self._ckpt_dir / f"inst_{self._next_id}",
+                interval_s=self._ckpt_interval,
+                commit_time_s=self._ckpt_time_s, t0=t)
         inst = DecodeInstanceSim(
             self._next_id, self.cfg_inf if serves_inference else self.cfg_ft,
             self.cfg_ft if colocate else None, sim,
             self.predictor, self.sim.seed + self._next_id,
             serves_inference=serves_inference, t0=t, role=role,
-            prefix_cache=self.cluster.prefix_cache,
+            prefix_cache=self.cluster.prefix_cache, ckpt=ckpt,
             **self.placement.spawn_kwargs(self, serves_inference))
         self._next_id += 1
         self.router.add_instance(inst, now=t)
@@ -242,6 +287,8 @@ class ClusterSim:
             duration = last + 30.0
         t, qi = 0.0, 0
         next_control = cl.autoscaler.interval_s
+        failsched = FailureSchedule(cl.failures, duration) \
+            if cl.failures is not None else None
         while t < duration:
             epoch_end = min(t + cl.tick_s, duration)
             while qi < len(pending) and pending[qi].arrival <= epoch_end:
@@ -256,6 +303,11 @@ class ClusterSim:
                 if inst.drained:
                     self.router.retire(inst.inst_id)
             self.placement.retire(self, epoch_end)
+            if failsched is not None:
+                # kills land after the epoch's stepping and BEFORE the
+                # control slot: the autoscaler's decode loop sees the
+                # shrunken snapshot the same epoch and replaces capacity
+                self._apply_failures(failsched, epoch_end)
             if cl.autoscale and epoch_end + 1e-9 >= next_control:
                 viol = self.router.recent_violation_frac()
                 d = self.autoscaler.evaluate(
@@ -265,11 +317,123 @@ class ClusterSim:
                 # the placement's own control slot (pool sizing / chunk-
                 # budget tuning / idle in chained mode)
                 self.placement.control(self, epoch_end, viol)
-                next_control += cl.autoscaler.interval_s
+                # re-sync the deadline past this epoch instead of a single
+                # increment: with interval_s < tick_s the old += fell
+                # unboundedly behind the clock (one evaluation per epoch
+                # either way, so decision logs stay bit-identical)
+                if cl.autoscaler.interval_s > 0:
+                    while next_control <= epoch_end + 1e-9:
+                        next_control += cl.autoscaler.interval_s
             t = epoch_end
             self._fleet_point(t, self._serving())
         self.router.check_conservation()
         return self._result(duration)
+
+    # -------------------------------------------------------- failures --
+    def _victim_candidates(self) -> List[Tuple[str, int]]:
+        """Eligible kill victims, deterministically ordered: live instances
+        (not already under a preemption notice) and, in pooled mode, active
+        prefill workers. The last inference-capable instance is protected —
+        a fleet with zero decode capacity has no defined hand-off target
+        (real clusters would stall, not crash; the simulator skips the
+        event instead)."""
+        insts = [i for i in self.router.instances.values()
+                 if i.preempt_deadline < 0]
+        serving = {i.inst_id for i in insts
+                   if i.serves_inference and i.role != "finetune"
+                   and not i.draining}
+        capable = {i.inst_id for i in insts
+                   if i.serves_inference and i.role != "finetune"}
+        protected = set()
+        if len(serving) <= 1:
+            protected |= serving
+        if len(capable) <= 1:
+            protected |= capable
+        out: List[Tuple[str, int]] = [
+            ("inst", i.inst_id) for i in insts
+            if i.inst_id not in protected]
+        pool = self.router.pool
+        if pool is not None:
+            out += [("worker", w.wid) for w in pool.active_workers()]
+        out.sort()
+        return out
+
+    def _apply_failures(self, sched: FailureSchedule, now: float) -> None:
+        """Consume the schedule's events due this epoch: hard kills, or
+        preemption notices (warning_s > 0) whose deadline kill fires in a
+        later epoch unless the victim drained first."""
+        cfg = self.cluster.failures
+        due = [pk for pk in self._pending_kills if pk[0] <= now + 1e-9]
+        self._pending_kills = [pk for pk in self._pending_kills
+                               if pk[0] > now + 1e-9]
+        for deadline, iid in sorted(due):
+            inst = self.router.instances.get(iid)
+            if inst is None:
+                continue             # drained and retired before deadline
+            capable = [i for i in self.router.instances.values()
+                       if i.serves_inference and i.role != "finetune"]
+            if inst.serves_inference and inst.role != "finetune" \
+                    and len(capable) <= 1:
+                # the notice elapsed but no replacement capacity exists
+                # yet: the stay-of-execution defers the kill one epoch —
+                # the fleet never loses its last inference-capable host
+                self._pending_kills.append(
+                    (now + self.cluster.tick_s, iid))
+                continue
+            self._kill_instance(iid, now)
+        for tk in sched.pop_due(now):
+            cand = self._victim_candidates()
+            if not cand:
+                continue
+            kind, vid = sched.pick(cand)
+            if kind == "worker":
+                self._kill_pool_worker(vid, now)
+            elif cfg.warning_s > 0:
+                inst = self.router.instances[vid]
+                inst.begin_preempt(tk + cfg.warning_s)
+                self._pending_kills.append((tk + cfg.warning_s, vid))
+                self._preemptions += 1
+            else:
+                self._kill_instance(vid, now)
+        # separate mode: a killed dedicated finetune instance is replaced
+        # by the training job's own scheduler (the autoscaler's decode
+        # loop only replaces serving capacity); the job restarts from its
+        # last checkpoint on the fresh host
+        if self.sim.mode == "separate" and not any(
+                i.ft is not None
+                for i in self.router.instances.values()):
+            self._spawn(now, role="finetune", serves_inference=False)
+
+    def _kill_instance(self, iid: int, now: float) -> None:
+        """Hard-kill one instance: strip its in-flight work, remove it from
+        the fleet, and re-enter every lost request through the router
+        (re-prefill at full length — its KV died with the host)."""
+        inst = self.router.instances[iid]
+        lost, ft_lost = inst.kill(now)
+        self._ft_lost_iterations += ft_lost
+        self.router.kill_instance(iid)
+        self._failures += 1
+        if lost:
+            n = self.router.requeue_failed(lost, now)
+            self._requeued += n
+            self._requeue_rejected += len(lost) - n
+
+    def _kill_pool_worker(self, wid: int, now: float) -> None:
+        """Kill one pooled prefill worker: the batch it was running dies
+        with it, so those requests are recalled from the decode instances
+        awaiting them and resubmitted to the (cluster-wide) queue."""
+        pool = self.router.pool
+        batch_rids = pool.kill_worker(wid, now)
+        self._failures += 1
+        reqs = []
+        for rid in batch_rids:
+            req = self.router.recall_pending(rid)
+            if req is not None:
+                reqs.append(req)
+        if reqs:
+            n = self.router.requeue_failed(reqs, now)
+            self._requeued += n
+            self._requeue_rejected += len(reqs) - n
 
     def _fleet_point(self, t: float, serving) -> None:
         self._fleet_timeline.append(
@@ -299,6 +463,14 @@ class ClusterSim:
                 sum(1 for x in res.tpot if x > lim) / len(res.tpot)
         res.fleet_timeline = self._fleet_timeline
         res.decisions = self.autoscaler.decisions
+        res.failures = self._failures
+        res.preemptions = self._preemptions
+        res.requeued_requests = self._requeued
+        res.requeue_rejected = self._requeue_rejected
+        res.ft_lost_iterations = self._ft_lost_iterations
+        res.checkpoint_commits = sum(
+            i.ckpt.commits for i in self.router.all_instances()
+            if i.ckpt is not None)
         res.final_fleet = len(self.router.instances)
         res.peak_fleet = max(self._peak_total, res.final_fleet)
         self.placement.finalize(self, res)

@@ -115,6 +115,17 @@ class CostModel:
         return max(flops / self.inst.peak_flops,
                    bytes_hbm / self.inst.hbm_bw) + STEP_OVERHEAD_S
 
+    def checkpoint_time(self) -> float:
+        """Device->host commit of the PEFT training state: bf16 trainable
+        weights plus fp32 Adam moments stream over the host DMA link (the
+        frozen base weights need no commit — that is the PEFT win). The
+        cluster failure layer (core/cluster.py) charges this to the
+        finetune quantum budget — a round inside the commit window runs
+        quantum 0, so inference latency never pays for checkpointing."""
+        trainable = self.cfg.lora_param_count() or self.cfg.param_count()
+        ckpt_bytes = trainable * (2.0 + 8.0)
+        return ckpt_bytes / self.inst.host_dma_bw
+
     def prefill_batch_latency(self, prompt_lens: Sequence[int]) -> float:
         """One fused prefill launch over a batch of (possibly ragged)
         prompts: token work is additive across requests, the weight stream

@@ -190,6 +190,19 @@ class ExperimentSpec:
                 "(n_sessions=0) — the session-keyed cache would reserve "
                 "allocator capacity and never hit; set n_sessions > 0 "
                 "or drop prefix_cache")
+        if cl.failures is not None:
+            f = cl.failures
+            if f.rate_per_min < 0 or f.warning_s < 0 or f.start_s < 0 \
+                    or f.checkpoint_interval_s < 0:
+                raise SpecError(
+                    "cluster.failures knobs (rate_per_min, warning_s, "
+                    "start_s, checkpoint_interval_s) must all be >= 0")
+            if f.rate_per_min == 0 and f.warning_s == 0 \
+                    and f.checkpoint_interval_s == 0:
+                raise SpecError(
+                    "cluster.failures is configured but fully inert "
+                    "(rate 0, no warning, no checkpointing) — drop it "
+                    "(failures: null) to state the fleet is stable")
         for i, ov in enumerate(cl.instance_overrides):
             if not isinstance(ov, dict):
                 raise SpecError(f"instance_overrides[{i}] must be an "

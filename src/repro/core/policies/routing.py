@@ -45,7 +45,11 @@ class RoundRobinRouting(RoutingPolicy):
 class RandomRouting(RoutingPolicy):
     def __init__(self, cfg):
         super().__init__(cfg)
-        self._rng = np.random.default_rng(cfg.seed)
+        # cfg.seed None means "unseeded config" (the cluster layer derives
+        # one before building the router); a bare ClusterRouter must still
+        # be deterministic, so fall back to 0 rather than OS entropy
+        self._rng = np.random.default_rng(
+            0 if cfg.seed is None else cfg.seed)
 
     def pick(self, cand, req, router):
         return cand[int(self._rng.integers(len(cand)))]

@@ -70,6 +70,10 @@ class PrefillWorker:
     n_batches: int = 0
     draining: bool = False
     last_done: float = 0.0           # monotone per worker (tested)
+    # failure layer: prefills whose output KV was later lost to a kill
+    # (the request was resubmitted); rids of the batch now running
+    n_invalidated: int = 0
+    current_batch: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +104,7 @@ class PrefillPool:
         self.ttft_slo_s = ttft_slo_s
         self.workers: Dict[int, PrefillWorker] = {}
         self.retired: Dict[int, PrefillWorker] = {}
+        self.killed: Dict[int, PrefillWorker] = {}   # failure-layer victims
         self._next_wid = 0
         for _ in range(cfg.n_workers):
             self.add_worker(t0)
@@ -148,8 +153,38 @@ class PrefillPool:
                 out.append(wid)
         return out
 
+    def kill_worker(self, wid: int, now: float) -> List[int]:
+        """Hard worker failure (cluster failure layer): the worker leaves
+        the pool immediately. Returns the rids of the batch it was still
+        running at ``now`` — their prefill output dies with the host, so
+        the caller must recall them from their decode instances and
+        resubmit. Queued work is untouched (the queue is cluster-wide)."""
+        w = self.workers.pop(wid)
+        w.draining = True
+        self.killed[wid] = w
+        if w.free_at <= now:
+            return []
+        return [rid for rid in w.current_batch
+                if self._done.get(rid) == wid]
+
+    def has_prefill_record(self, rid: int) -> bool:
+        """True when ``rid`` holds a completed-prefill record that must be
+        forgotten before the request may be resubmitted."""
+        return rid in self._done
+
+    def forget(self, rid: int) -> None:
+        """Erase one prefill record after its output KV was lost to a
+        failure, so the request can be submitted again. The worker's
+        throughput counter keeps the work it did — the conservation audit
+        tracks invalidations separately."""
+        wid = self._done.pop(rid)
+        w = self.workers.get(wid) or self.retired.get(wid) \
+            or self.killed.get(wid)
+        w.n_invalidated += 1
+
     def all_workers(self) -> List[PrefillWorker]:
-        return list(self.workers.values()) + list(self.retired.values())
+        return list(self.workers.values()) + list(self.retired.values()) \
+            + list(self.killed.values())
 
     # -------------------------------------------------------------- queue --
     def _order_key(self, req: Request) -> float:
@@ -163,7 +198,10 @@ class PrefillPool:
             - self.cm.prefill_latency(req.effective_prompt_len)
 
     def submit(self, req: Request, now: float) -> None:
-        assert req.rid not in self._submitted, "request submitted twice"
+        # a genuine double-submit is still an error; a RESUBMIT after a
+        # failure is legal once forget() erased the lost prefill record
+        assert req.rid not in self._queued_rids \
+            and req.rid not in self._done, "request submitted twice"
         self._submitted[req.rid] = req
         heapq.heappush(self._queue, (self._order_key(req), req.rid, req))
         heapq.heappush(self._arr_heap, (req.arrival, req.rid))
@@ -284,6 +322,7 @@ class PrefillPool:
             w.busy_s += lat
             w.n_batches += 1
             w.n_prefilled += len(batch)
+            w.current_batch = [r.rid for r in batch]
             for r in batch:
                 r.prefill_start = start
                 r.prefill_done = done
@@ -311,4 +350,7 @@ class PrefillPool:
         for wid in self._done.values():
             per_worker[wid] = per_worker.get(wid, 0) + 1
         for w in self.all_workers():
-            assert per_worker.get(w.wid, 0) == w.n_prefilled
+            # live records + failure-invalidated ones account for every
+            # prefill the worker ever ran
+            assert per_worker.get(w.wid, 0) + w.n_invalidated \
+                == w.n_prefilled

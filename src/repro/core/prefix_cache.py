@@ -115,6 +115,16 @@ class PrefixCache:
             self._used_tokens -= tok
             self.stats.evictions += 1
 
+    def invalidate_all(self) -> None:
+        """Drop every cached prefix at once — the instance's KV memory is
+        gone (host failure, cluster failure layer). The cache object stays
+        alive: ``revoke`` must still work for in-flight requests whose pin
+        to this instance breaks after the kill. Flushed entries count as
+        evictions in the stats."""
+        self.stats.evictions += len(self._entries)
+        self._entries.clear()
+        self._used_tokens = 0
+
     def __len__(self) -> int:
         return len(self._entries)
 

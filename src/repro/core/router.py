@@ -85,7 +85,11 @@ class RouterConfig:
     tpot_slack: float = 1.05         # scheduler enforces per round
     tpot_quantile: float = 0.99      # per-request attainment percentile
     reject_load: float = 4.0         # reject when every target's queue
-    seed: int = 0                    # exceeds reject_load x max_slots
+    # exceeds reject_load x max_slots.
+    # None = derive from the experiment seed (SimConfig.seed +
+    # ROUTER_SEED_SALT in core/cluster.py); any int — including 0 — is an
+    # explicit seed and is honored as-is
+    seed: Optional[int] = None
     # session_affinity: the sticky instance absorbs its sessions until
     # its load passes this threshold, then the session remaps to the
     # least loaded instance (cache_aware does not use this knob — it
@@ -200,6 +204,60 @@ class ClusterRouter:
         assert inst.drained, "retiring an instance that still holds work"
         self.placement.on_retire_instance(inst_id, self)
         self.retired[inst_id] = inst
+
+    def kill_instance(self, inst_id: int) -> None:
+        """Remove a failed instance from the fleet (cluster failure layer).
+        Unlike ``retire`` there is no drained precondition — the caller
+        already stripped its in-flight work via ``DecodeInstanceSim.kill``
+        and is responsible for requeueing it. The carcass moves to
+        ``retired`` so completed-request accounting, broken-pin prefix
+        revocation and finetune progress bookkeeping keep working."""
+        inst = self.instances.pop(inst_id)
+        self.placement.on_retire_instance(inst_id, self)
+        self.retired[inst_id] = inst
+
+    def requeue_failed(self, reqs: List[Request], now: float) -> int:
+        """Re-admit requests that lost their KV to an instance failure.
+        Each request re-enters the normal placement path (re-prefill at
+        full length — the cached context is gone) or is rejected when no
+        surviving capacity can absorb it. Returns how many re-entered.
+
+        The caller must already have detached the requests from the dead
+        instance (``DecodeInstanceSim.kill``/``recall``), so deleting the
+        stale assignment here keeps exactly-once accounting intact."""
+        n = 0
+        for req in sorted(reqs, key=lambda r: (r.arrival, r.rid)):
+            rr = self._routed_ix[req.rid]
+            del self._assigned[req.rid]
+            req.reset_for_retry()
+            cand = [i for i in self.serving_instances()
+                    if i.load() <= self.cfg.reject_load]
+            if not cand or self.placement.saturated(cand, self):
+                self._assigned[req.rid] = REJECTED
+                rr.instance = REJECTED
+                continue
+            if self.pool is not None \
+                    and self.pool.has_prefill_record(req.rid):
+                # erase the lost prefill record so the pool accepts the
+                # request again (the produced KV died with the host)
+                self.pool.forget(req.rid)
+            target = self.placement.place(req, now, cand, self)
+            self._assigned[req.rid] = target
+            rr.instance = target
+            n += 1
+        return n
+
+    def recall_pending(self, rid: int) -> Optional[Request]:
+        """Pull a not-yet-admitted request back from its decode instance
+        (its pooled prefill worker died before the hand-off's ready time).
+        Returns None when the request can't be recalled — e.g. its own
+        instance was killed earlier this epoch and it is already back in
+        the queue."""
+        iid = self._assigned.get(rid, REJECTED)
+        inst = self.instances.get(iid) or self.retired.get(iid)
+        if inst is None:
+            return None
+        return inst.recall(rid)
 
     def all_instances(self) -> List[DecodeInstanceSim]:
         """Active + retired, for end-of-run accounting."""
@@ -349,7 +407,10 @@ class ClusterRouter:
             ttft_ok, tpot_ok, ttft, tpot_p = request_slo(r, cfg)
             ttfts.append(ttft)
             tpots.append(tpot_p)
-            if r.prefill_start >= 0:           # went through the pool
+            if r.prefill_start >= 0 and r.restarts == 0:
+                # went through the pool; restarted requests are excluded —
+                # their re-prefill timestamps postdate the first token, so
+                # the stage split is meaningless for them
                 stage_q.append(r.prefill_start - r.arrival)
                 stage_p.append(r.prefill_done - r.prefill_start)
                 stage_d.append(r.token_times[0] - r.prefill_done)

@@ -27,7 +27,8 @@ from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.predictor import TwoStageLatencyPredictor
 from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.core.scheduler import QoSScheduler, SchedulerConfig
-from repro.distributed.fault_tolerance import (StragglerConfig,
+from repro.distributed.fault_tolerance import (CheckpointManager,
+                                               StragglerConfig,
                                                StragglerMitigator)
 from repro.models.config import ModelConfig
 from repro.serving.request import Request
@@ -227,6 +228,53 @@ class FinetuneSim:
         return (f + b) / 2
 
 
+class FinetuneCheckpointer:
+    """Periodic durable commit of a finetune job's progress through the
+    fault-tolerance ``CheckpointManager`` (distributed/fault_tolerance.py).
+
+    The cluster failure layer attaches one per finetune-carrying instance
+    when failure injection is on: every ``interval_s`` of sim time the
+    job's progress commits as a real on-disk checkpoint (restore after a
+    kill reads it back — the module's atomic-manifest path is exercised,
+    not mocked), and the commit's device->host stream cost
+    (``CostModel.checkpoint_time``) is charged to the finetune quantum
+    budget — rounds inside the commit window run quantum 0."""
+
+    def __init__(self, directory, interval_s: float, commit_time_s: float,
+                 t0: float = 0.0, keep: int = 2):
+        self.mgr = CheckpointManager(directory, keep=keep)
+        self.interval_s = interval_s
+        self.commit_time_s = commit_time_s
+        self.last_commit_t = t0
+        self.busy_until = -1.0
+        self.commits = 0
+
+    def busy(self, t: float) -> bool:
+        """True while a commit's device->host stream is still running —
+        the finetune job yields its quantum for these rounds."""
+        return t < self.busy_until
+
+    def maybe_commit(self, t: float, units_done: int) -> bool:
+        """Commit when the cadence is due. Returns True iff a commit was
+        started at ``t`` (the caller charges the round's quantum to it)."""
+        if t - self.last_commit_t < self.interval_s:
+            return False
+        self.commit(t, units_done)
+        return True
+
+    def commit(self, t: float, units_done: int) -> None:
+        self.commits += 1
+        self.mgr.save(self.commits, {"units_done": np.asarray(units_done)})
+        self.last_commit_t = t
+        self.busy_until = t + self.commit_time_s
+
+    def restore_units(self) -> int:
+        """Progress at the last durable commit (0 before the first one)."""
+        if self.mgr.latest_step() is None:
+            return 0
+        return int(self.mgr.restore({"units_done": None})["units_done"])
+
+
 # ----------------------------------------------------------- decode + colo
 # Instance roles (autoscaler-controlled; see core/autoscaler.py):
 #   decode    — inference only, finetune quantum forced to 0
@@ -252,7 +300,8 @@ class DecodeInstanceSim:
                  serves_inference: bool = True, t0: float = 0.0,
                  role: Optional[str] = None, *,
                  chunked: Optional[ChunkedPrefillConfig] = None,
-                 prefix_cache: Optional[PrefixCacheConfig] = None):
+                 prefix_cache: Optional[PrefixCacheConfig] = None,
+                 ckpt: Optional[FinetuneCheckpointer] = None):
         self.inst_id = inst_id
         self.sim = sim
         self.cfg_inf = cfg_inf
@@ -313,6 +362,10 @@ class DecodeInstanceSim:
         self.role = role
         self.t = t0                      # instance-local clock
         self.draining = False            # router stops dispatching here
+        # ---- failure layer (core/cluster.py, ClusterConfig.failures) ----
+        self.ckpt = ckpt if self.colocate else None
+        self.preempt_deadline = -1.0     # >= 0: spot-style notice received
+        self.killed_at = -1.0            # >= 0: hard-killed at this time
         self.active: List[Request] = []
         self._pending: List[Tuple[float, int, Request]] = []   # ready heap
         self.all_reqs: List[Request] = []
@@ -357,6 +410,61 @@ class DecodeInstanceSim:
                        (max(req.arrival, now), req.rid, req))
         self.all_reqs.append(req)
 
+    def recall(self, rid: int) -> Optional[Request]:
+        """Pull a not-yet-admitted request back out of the ready queue (its
+        pooled prefill worker died, so the KV it was waiting on is gone).
+        Only pending requests can be recalled — an admitted one holds real
+        KV on *this* instance and is unaffected by a worker's death."""
+        for i, (_, r_rid, req) in enumerate(self._pending):
+            if r_rid == rid:
+                self._pending.pop(i)
+                heapq.heapify(self._pending)
+                self.all_reqs = [r for r in self.all_reqs if r.rid != rid]
+                return req
+        return None
+
+    def begin_preempt(self, deadline: float) -> None:
+        """Spot-style preemption notice: drain gracefully until
+        ``deadline``. No new dispatches land here (draining), the finetune
+        job commits a final checkpoint and stops — whatever decode work
+        remains at the deadline dies with the host."""
+        self.draining = True
+        self.preempt_deadline = deadline
+        if self.ckpt is not None and self.ft is not None:
+            self.ckpt.commit(self.t, self.ft.units_done)
+
+    def kill(self, t: float) -> Tuple[List[Request], float]:
+        """Hard instance failure at ``t``: every in-flight request loses
+        its KV cache (the caller requeues them through the router), the
+        prefix cache is invalidated, and the finetune job rolls back to
+        its last durable checkpoint. Returns ``(lost_requests,
+        ft_iterations_lost)``; completed requests stay in ``all_reqs`` —
+        they happened."""
+        lost = list(self.active)
+        lost += [item[2] for item in self._pending]
+        lost += [item[2] for item in self._chunk_pending]
+        self.active = []
+        self._pending = []
+        self._chunk_pending = []
+        lost_rids = {r.rid for r in lost}
+        self.all_reqs = [r for r in self.all_reqs
+                         if r.rid not in lost_rids]
+        self.draining = True
+        self.killed_at = t
+        ft_lost_iters = 0.0
+        if self.ft is not None:
+            restored = 0
+            if self.ckpt is not None:
+                restored = min(self.ckpt.restore_units(),
+                               self.ft.units_done)
+            ft_lost_iters = (self.ft.units_done - restored) \
+                / self.ft.units_per_iter
+            self.ft.units_done = restored
+            self.ft.cursor = restored % self.ft.units_per_iter
+        if self.prefix_cache is not None:
+            self.prefix_cache.invalidate_all()
+        return lost, ft_lost_iters
+
     @property
     def queue_depth(self) -> int:
         return len(self._pending) + len(self._chunk_pending) \
@@ -384,6 +492,21 @@ class DecodeInstanceSim:
     def _pick_k(self, t, bs, ctx) -> int:
         if not self.colocate or self.role == "decode":
             return 0
+        if self.preempt_deadline >= 0:
+            # preemption notice: the job committed its final checkpoint in
+            # begin_preempt and stops — remaining rounds drain decode only
+            return 0
+        if self.ckpt is not None:
+            if self.ckpt.busy(t):
+                # the commit's device->host stream occupies the finetune
+                # side of the round: quantum 0, charged as a stall
+                if bs > 0:
+                    self.ft.stall_rounds += 1
+                return 0
+            if self.ckpt.maybe_commit(t, self.ft.units_done):
+                if bs > 0:
+                    self.ft.stall_rounds += 1
+                return 0
         if self.straggler.suppress_quantum and bs > 0:
             self.ft.stall_rounds += 1
             return 0
@@ -544,11 +667,18 @@ class DecodeInstanceSim:
                     continue
                 break
             self.alloc.pressure_shrink()
-            if not self.alloc.kv_alloc_tokens(r.prompt_len):
+            # context_len == prompt_len on first admission; a restarted
+            # request (instance failure) re-allocates its full context —
+            # the re-prefill regenerated prompt AND already-emitted tokens
+            if not self.alloc.kv_alloc_tokens(r.context_len):
                 break
             heapq.heappop(self._pending)
-            r.token_times.append(self.t)    # first token from prefill
-            r.generated = 1
+            if r.generated == 0:
+                r.token_times.append(self.t)    # first token from prefill
+                r.generated = 1
+            # else: re-admitted after a failure — decode resumes at the old
+            # cursor, and the kill -> re-admit gap lands between consecutive
+            # token_times as the churn TPOT penalty
             self.active.append(r)
             if self.prefix_cache is not None and r.session_id >= 0:
                 # the prompt KV is resident from here on: later requests of

@@ -75,6 +75,8 @@ class CheckpointManager:
     """Atomic, async, sharded-restore checkpoint manager."""
 
     def __init__(self, directory, keep: int = 3):
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0, got {keep}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -121,7 +123,10 @@ class CheckpointManager:
 
     def _gc(self):
         steps = sorted(self.steps())
-        for s in steps[:-self.keep]:
+        # keep == 0 retains nothing: steps[:-0] would be the EMPTY slice
+        # (retaining everything), so it needs its own branch
+        drop = steps if self.keep == 0 else steps[:-self.keep]
+        for s in drop:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
 
     def wait(self) -> None:

@@ -36,6 +36,9 @@ class Request:
     prefill_done: float = -1.0     # time prefill finished (TTFT component)
     prefill_worker: int = -1       # pool worker that ran the prefill
     finish: float = -1.0
+    # times the request lost its KV to an instance failure and re-entered
+    # the router (cluster failure layer, core/cluster.py)
+    restarts: int = 0
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -53,6 +56,22 @@ class Request:
         """Per-output-token latencies (decode QoS metric)."""
         ts = self.token_times
         return [ts[i] - ts[i - 1] for i in range(1, len(ts))]
+
+    def reset_for_retry(self) -> None:
+        """Strip all per-placement prefill state so the request can re-enter
+        the router after its instance died: the KV cache (including any
+        prefix-cache credit) is gone, so prefill restarts at full length.
+        Decode progress bookkeeping (``generated``/``token_times``) is kept
+        — already-emitted tokens happened, and the re-prefill gap shows up
+        between consecutive token times as the churn TPOT penalty."""
+        self.cache_hit_tokens = 0
+        self.prefilled_tokens = 0
+        self.prefill_start = -1.0
+        self.prefill_done = -1.0
+        self.prefill_worker = -1
+        self.phase = Phase.QUEUED
+        self.slot = -1
+        self.restarts += 1
 
 
 @dataclasses.dataclass

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,6 +74,79 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
             r.session_id = int(srng.zipf(cfg.session_zipf_a)
                                % cfg.n_sessions)
     return reqs
+
+
+# ---------------------------------------------------- failure injection
+# Own RNG stream salt (like the session stream's 104729): a failure
+# schedule for seed s never perturbs the arrival/length draws of seed s.
+FAILURE_SEED_SALT = 92821
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureConfig:
+    """Failure/preemption injection for the cluster layer (core/cluster.py,
+    ``ClusterConfig.failures``). Kills arrive as a Poisson process over the
+    whole fleet; each event takes one victim (a live instance, or an active
+    pooled prefill worker) chosen uniformly from the eligible candidates.
+
+    ``warning_s > 0`` turns hard kills into spot-style preemptions: the
+    victim gets a notice, drains gracefully (no new dispatches, finetune
+    commits a final checkpoint and stops) and is hard-killed only if work
+    remains at the deadline. ``checkpoint_interval_s`` is the cadence at
+    which colocated/dedicated finetune jobs commit progress through the
+    fault-tolerance ``CheckpointManager`` — a kill rolls the job back to
+    its last commit, and each commit's device->host stream time is charged
+    to the finetune quantum budget (``CostModel.checkpoint_time``).
+    0 disables checkpointing (a kill loses all finetune progress)."""
+    rate_per_min: float = 0.0        # fleet-wide Poisson kill rate; 0 = off
+    warning_s: float = 0.0           # preemption notice; 0 = hard kill
+    start_s: float = 0.0             # grace period before the first event
+    checkpoint_interval_s: float = 20.0
+    checkpoint_dir: Optional[str] = None   # None = private temp dir
+    seed: int = 0
+
+
+class FailureSchedule:
+    """Seeded Poisson kill times + deterministic victim choice.
+
+    The schedule is fully determined by ``(cfg, duration_s)`` — two runs
+    with the same failure config see identical kill times regardless of
+    mode or fleet shape, so harli-vs-separate comparisons at one churn
+    rate face the same storm (victim draws consume one RNG step per
+    event, keeping the choice sequence aligned across runs too)."""
+
+    def __init__(self, cfg: FailureConfig, duration_s: float):
+        self.cfg = cfg
+        self.events: List[float] = []
+        rng = np.random.default_rng(cfg.seed + FAILURE_SEED_SALT)
+        if cfg.rate_per_min > 0:
+            rate_s = cfg.rate_per_min / 60.0
+            t = cfg.start_s
+            while True:
+                t += float(rng.exponential(1.0 / rate_s))
+                if t >= duration_s:
+                    break
+                self.events.append(t)
+        self._victim_rng = np.random.default_rng(
+            cfg.seed + FAILURE_SEED_SALT + 1)
+        self._cursor = 0
+
+    def pop_due(self, now: float) -> List[float]:
+        """Event times that have fired by ``now`` (consumed exactly once)."""
+        out = []
+        while self._cursor < len(self.events) \
+                and self.events[self._cursor] <= now:
+            out.append(self.events[self._cursor])
+            self._cursor += 1
+        return out
+
+    def pick(self, candidates: Sequence[Tuple[str, int]]) -> Tuple[str, int]:
+        """Uniform victim among the (kind, id) candidates. One RNG draw per
+        call, even for a single candidate, so the draw sequence stays
+        aligned across runs with different fleet shapes."""
+        assert candidates, "pick() on an empty candidate list"
+        ix = int(self._victim_rng.integers(len(candidates)))
+        return candidates[ix]
 
 
 # ------------------------------------------------- multi-tenant scenarios

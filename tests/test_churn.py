@@ -1,0 +1,191 @@
+"""Failure/preemption injection: seeded FailureSchedule determinism,
+request conservation under churn in every prefill mode, checkpoint-bounded
+finetune loss, prefix-cache invalidation on kill, and the zero-churn
+bit-identity guarantee (an inert failure layer must not perturb the
+stable-fleet path)."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, simulate_cluster
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.prefix_cache import PrefixCacheConfig
+from repro.core.router import RouterConfig
+from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
+                                  FinetuneCheckpointer, SimConfig)
+from repro.serving.trace import (FAILURE_SEED_SALT, FailureConfig,
+                                 FailureSchedule, generate_scenario)
+
+LLAMA = get_config("llama3-8b")
+
+
+def _run(mode="harli", duration=40.0, rps=8.0, n=3, seed=2,
+         failures=None, **cluster_kw):
+    reqs = generate_scenario("steady", duration, rps, seed=seed - 1)
+    return simulate_cluster(
+        LLAMA, LLAMA, reqs, SimConfig(mode=mode, seed=seed),
+        ClusterConfig(n_initial=n, router=RouterConfig(),
+                      failures=failures, **cluster_kw))
+
+
+# ---------------------------------------------------- FailureSchedule ----
+def test_schedule_deterministic_per_seed():
+    cfg = FailureConfig(rate_per_min=4.0, seed=11)
+    a = FailureSchedule(cfg, 300.0)
+    b = FailureSchedule(cfg, 300.0)
+    assert a.events and a.events == b.events
+    c = FailureSchedule(dataclasses.replace(cfg, seed=12), 300.0)
+    assert a.events != c.events
+
+
+def test_schedule_rate_zero_empty():
+    assert FailureSchedule(FailureConfig(rate_per_min=0.0), 300.0) \
+        .events == []
+
+
+def test_schedule_events_in_window():
+    cfg = FailureConfig(rate_per_min=10.0, start_s=30.0, seed=5)
+    sched = FailureSchedule(cfg, 120.0)
+    assert all(30.0 <= t <= 120.0 for t in sched.events)
+    assert sched.events == sorted(sched.events)
+
+
+def test_schedule_pop_due_consumes_in_order():
+    sched = FailureSchedule(FailureConfig(rate_per_min=20.0, seed=7), 60.0)
+    popped = []
+    for t in range(0, 61, 5):
+        popped += sched.pop_due(float(t))
+    assert popped == sched.events
+    assert sched.pop_due(1e9) == []
+
+
+def test_schedule_not_mixed_with_victim_rng():
+    """The kill-time schedule is a function of FailureConfig.seed alone —
+    harli and separate fleets face the same storm; only victim picks
+    consume the second stream."""
+    cfg = FailureConfig(rate_per_min=4.0, seed=11)
+    a = FailureSchedule(cfg, 300.0)
+    b = FailureSchedule(cfg, 300.0)
+    b.pick([("inst", 0), ("inst", 1)])   # victim draw must not shift kills
+    assert a.events == b.events
+    assert FAILURE_SEED_SALT != 0        # schedule stream != sim stream
+
+
+# ----------------------------------------------- conservation + counters --
+CHURN = FailureConfig(rate_per_min=6.0, checkpoint_interval_s=10.0, seed=4)
+MODE_KW = {
+    "chained": dict(prefill_mode="chained", prefill=None),
+    "pooled": dict(prefill_mode="pooled", prefill=PrefillPoolConfig()),
+    "chunked": dict(prefill_mode="chunked", prefill=None,
+                    chunked=ChunkedPrefillConfig()),
+}
+
+
+@pytest.mark.parametrize("prefill_mode", list(MODE_KW))
+def test_conservation_under_churn(prefill_mode):
+    """Kills mid-epoch must not lose or double-count requests in any
+    prefill mode — the run's own router/pool audits plus external
+    accounting. The failure rate is high enough that the run *must*
+    actually kill something for the test to mean anything."""
+    res = _run(failures=CHURN, **MODE_KW[prefill_mode])
+    assert res.failures > 0, "churn scenario killed nothing"
+    s = res.stats
+    assert s.routed + s.rejected == s.offered
+    assert res.requeued_requests + res.requeue_rejected > 0 \
+        or prefill_mode == "chunked"     # chunked may lose only idle insts
+    assert res.checkpoint_commits > 0
+    assert s.goodput > 0
+
+
+def test_churn_deterministic_rerun():
+    a = _run(failures=CHURN, **MODE_KW["pooled"])
+    b = _run(failures=CHURN, **MODE_KW["pooled"])
+    assert a.stats == b.stats
+    assert (a.failures, a.preemptions, a.requeued_requests,
+            a.requeue_rejected, a.ft_lost_iterations,
+            a.checkpoint_commits) == \
+           (b.failures, b.preemptions, b.requeued_requests,
+            b.requeue_rejected, b.ft_lost_iterations,
+            b.checkpoint_commits)
+
+
+def test_zero_churn_bit_identical_to_no_failure_path():
+    """An inert failure layer (rate 0, no warning, no checkpointing) must
+    reproduce the failures=None run bit-for-bit — the injection hooks are
+    pure additions to the epoch loop."""
+    base = _run(failures=None)
+    inert = _run(failures=FailureConfig(rate_per_min=0.0, warning_s=0.0,
+                                        checkpoint_interval_s=0.0))
+    assert inert.failures == 0 and inert.checkpoint_commits == 0
+    assert base.stats == inert.stats
+    assert base.ft_throughput == inert.ft_throughput
+    assert [d.action for d in base.decisions] == \
+        [d.action for d in inert.decisions]
+    assert base.fleet_timeline == inert.fleet_timeline
+
+
+def test_preemption_warning_drains_gracefully():
+    """warning_s > 0 converts hard kills of instances into drain notices:
+    preemptions are counted, and because begin_preempt commits a
+    checkpoint, warned finetune jobs lose no progress."""
+    res = _run(failures=dataclasses.replace(CHURN, warning_s=5.0),
+               duration=50.0)
+    assert res.preemptions > 0
+    assert res.ft_lost_iterations == 0.0
+    s = res.stats
+    assert s.routed + s.rejected == s.offered
+
+
+def test_separate_mode_respawns_dedicated_finetune():
+    """In separate mode the dedicated finetune host is outside the
+    autoscaler's serving loop — the failure layer itself must replace it,
+    so finetune throughput survives churn."""
+    res = _run(mode="separate", failures=CHURN)
+    assert res.failures > 0
+    assert res.ft_throughput > 0
+
+
+# --------------------------------------------------- instance-level kill --
+def _inst(tmp_path=None, cfg_ft=LLAMA, **kw):
+    sim = SimConfig(mode="harli", seed=0)
+    ckpt = None
+    if tmp_path is not None:
+        ckpt = FinetuneCheckpointer(tmp_path, interval_s=5.0,
+                                    commit_time_s=0.01)
+    return DecodeInstanceSim(0, LLAMA, cfg_ft, sim, None, 0,
+                             ckpt=ckpt, **kw)
+
+
+def test_kill_rolls_back_to_last_commit(tmp_path):
+    """Finetune loss on a kill is bounded by the checkpoint cadence: the
+    job resumes at exactly the last committed unit count."""
+    inst = _inst(tmp_path)
+    inst.ft.units_done = 30
+    inst.ckpt.commit(10.0, inst.ft.units_done)
+    inst.ft.units_done = 37              # progress after the commit
+    lost, ft_lost = inst.kill(20.0)
+    assert inst.ft.units_done == 30
+    assert inst.ft.cursor == 30 % inst.ft.units_per_iter
+    assert ft_lost == pytest.approx(7 / inst.ft.units_per_iter)
+
+
+def test_kill_without_checkpointer_loses_everything():
+    inst = _inst(tmp_path=None)
+    inst.ft.units_done = 37
+    _, ft_lost = inst.kill(20.0)
+    assert inst.ft.units_done == 0
+    assert ft_lost == pytest.approx(37 / inst.ft.units_per_iter)
+
+
+def test_kill_invalidates_prefix_cache():
+    """A dead host's KV is gone: every cached session prefix must be
+    evicted so post-restart lookups miss instead of claiming dead chunks."""
+    inst = _inst(cfg_ft=None, prefix_cache=PrefixCacheConfig(chunks=8))
+    inst.prefix_cache.insert(1, 256)
+    inst.prefix_cache.insert(2, 128)
+    assert len(inst.prefix_cache) == 2
+    inst.kill(5.0)
+    assert len(inst.prefix_cache) == 0
+    assert inst.prefix_cache.used_tokens == 0

@@ -410,9 +410,11 @@ def test_recent_violation_frac_is_fleet_wide_by_time():
 
 
 def test_router_seed_derives_from_sim_seed():
-    """`random` policy must differ across SimConfig seeds (the default
-    RouterConfig.seed=0 used to pin it), while an explicit seed wins."""
-    def routed_seq(sim_seed, router_seed=0):
+    """`random` policy must differ across SimConfig seeds (the sentinel
+    default derives router seed from SimConfig.seed), while an explicit
+    seed wins — including the explicit value 0, which the old seed=0
+    sentinel used to swallow."""
+    def routed_seq(sim_seed, router_seed=None):
         reqs = generate_scenario("steady", 10.0, 8.0, seed=1)
         cs = ClusterSim(LLAMA, LLAMA, SimConfig(mode="harli", seed=sim_seed),
                         ClusterConfig(n_initial=3, autoscale=False,
@@ -427,6 +429,11 @@ def test_router_seed_derives_from_sim_seed():
     assert seq_a != seq_b, "random policy ignored SimConfig.seed"
     _, explicit = routed_seq(sim_seed=2, router_seed=123)
     assert explicit == 123
+    # seed=0 is a real seed now (sentinel is None): same router seed under
+    # different sim seeds
+    _, zero_a = routed_seq(sim_seed=2, router_seed=0)
+    _, zero_b = routed_seq(sim_seed=3, router_seed=0)
+    assert zero_a == 0 and zero_b == 0
 
 
 # ------------------------------------------------- stepped == monolithic --

@@ -65,6 +65,23 @@ def test_checkpoint_restore_missing(tmp_path, key):
         mgr.restore(_tree(key))
 
 
+def test_checkpoint_gc_keep_zero(tmp_path):
+    """keep=0 means retain nothing: every completed save is collected.
+    Regression: ``steps[:-0]`` is the empty slice, so keep=0 used to
+    silently keep *everything* instead."""
+    tree = {"x": np.arange(4)}
+    mgr = CheckpointManager(tmp_path, keep=0)
+    for step in (1, 2):
+        mgr.save(step, tree)
+    assert mgr.steps() == []
+    assert mgr.latest_step() is None
+
+
+def test_checkpoint_negative_keep_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep must be >= 0"):
+        CheckpointManager(tmp_path, keep=-1)
+
+
 ELASTIC_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
