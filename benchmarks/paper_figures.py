@@ -576,23 +576,34 @@ def cluster_cache_aware(duration_s: float = 60.0):
 # capacity, and colocated finetune jobs roll back to their last
 # checkpoint commit. Rate 0 runs failures=None — the stable-fleet path —
 # so the sweep's origin is bit-identical to every other cluster figure.
+# The harli+mig series re-runs harli with live KV migration armed
+# (docs/cluster.md "Surviving preemption"): same kills, but warned
+# instances pre-copy their KV instead of re-prefilling losers from
+# scratch.
 def cluster_churn(duration_s: float = 90.0):
     import os
 
     from repro.core.api import ExperimentSpec
-    from repro.core.cluster import ClusterConfig
+    from repro.core.cluster import ClusterConfig, KVMigrationConfig
     from repro.core.prefill_pool import PrefillPoolConfig
     from repro.core.router import RouterConfig
     from repro.serving.trace import FailureConfig
 
     rcfg = RouterConfig()
     rates = (0.0, 0.5, 1.0, 2.0, 4.0)
+    arms = (("harli", "harli", None), ("separate", "separate", None),
+            ("harli+mig", "harli", KVMigrationConfig()))
     out = {}
     for rate in rates:
         failures = None if rate == 0 else FailureConfig(
             rate_per_min=rate, warning_s=5.0,
             checkpoint_interval_s=15.0, seed=9)
-        for sim_mode in ("harli", "separate"):
+        for arm, sim_mode, migration in arms:
+            if rate == 0 and arm == "harli+mig":
+                # no kills -> migration never fires; bit-identical to
+                # plain harli (pinned in tests/test_survivability.py)
+                out[(arm, rate)] = out[("harli", rate)]
+                continue
             t0 = time.time()
             res = ExperimentSpec(
                 name=f"cluster_churn_{sim_mode}_{rate:g}",
@@ -601,10 +612,11 @@ def cluster_churn(duration_s: float = 90.0):
                 cluster=ClusterConfig(
                     n_initial=3, router=rcfg, prefill_mode="pooled",
                     prefill=PrefillPoolConfig(),
-                    failures=failures)).run()
-            out[(sim_mode, rate)] = res
+                    failures=failures,
+                    migration=migration if rate else None)).run()
+            out[(arm, rate)] = res
             s = res.stats
-            _row(f"cluster_churn,{sim_mode},rate{rate:g}",
+            _row(f"cluster_churn,{arm},rate{rate:g}",
                  (time.time() - t0) * 1e6,
                  f"goodput={s.goodput:.2f}|thr={s.throughput:.2f}"
                  f"|attain={s.slo_attainment:.3f}"
@@ -613,16 +625,22 @@ def cluster_churn(duration_s: float = 90.0):
                  f"|kills={res.failures}|warned={res.preemptions}"
                  f"|requeued={res.requeued_requests}"
                  f"|requeue_rejected={res.requeue_rejected}"
+                 f"|migrated={res.migrated_requests}"
+                 f"|mig_kv_tokens={res.migrated_kv_tokens}"
+                 f"|mig_reprefills={res.migration_reprefills}"
                  f"|ft={res.ft_throughput:.2f}"
                  f"|ft_lost_iters={res.ft_lost_iterations:.1f}"
                  f"|ckpt_commits={res.checkpoint_commits}")
     for rate in rates[1:]:
         h = out[("harli", rate)]
         s = out[("separate", rate)]
+        m = out[("harli+mig", rate)]
         _row(f"cluster_churn.summary,rate{rate:g}", 0,
              f"goodput_ratio="
              f"{h.stats.goodput/max(s.stats.goodput, 1e-9):.2f}x"
-             f"|ft_ratio={h.ft_throughput/max(s.ft_throughput, 1e-9):.2f}x")
+             f"|ft_ratio={h.ft_throughput/max(s.ft_throughput, 1e-9):.2f}x"
+             f"|mig_vs_reprefill="
+             f"{m.stats.goodput/max(h.stats.goodput, 1e-9):.2f}x")
 
     try:
         import matplotlib
@@ -632,7 +650,8 @@ def cluster_churn(duration_s: float = 90.0):
         _row("cluster_churn.png", 0, "skipped_no_matplotlib")
         return
 
-    C = {"harli": "#2a78d6", "separate": "#eb6834", "ink": "#0b0b0b",
+    C = {"harli": "#2a78d6", "separate": "#eb6834",
+         "harli+mig": "#1baf7a", "ink": "#0b0b0b",
          "ink2": "#52514e", "grid": "#e4e3df", "surface": "#fcfcfb",
          "slo": "#b3261e"}
     tpot_limit_ms = rcfg.tpot_slo_s * rcfg.tpot_slack * 1e3
@@ -650,10 +669,10 @@ def cluster_churn(duration_s: float = 90.0):
     fig, axes = plt.subplots(1, 4, figsize=(10.8, 3.1),
                              facecolor=C["surface"])
     for ax, (title, get, slo) in zip(axes, panels):
-        for sim_mode in ("harli", "separate"):
-            ax.plot(rates, [get(out[(sim_mode, r)]) for r in rates],
-                    marker="o", ms=3.5, lw=1.4, color=C[sim_mode],
-                    label=sim_mode)
+        for arm, _, _ in arms:
+            ax.plot(rates, [get(out[(arm, r)]) for r in rates],
+                    marker="o", ms=3.5, lw=1.4, color=C[arm],
+                    label=arm)
         if slo is not None:
             ax.axhline(slo, color=C["slo"], lw=1.1, ls="--")
         ax.set_title(title, fontsize=9.5, color=C["ink"])
@@ -677,10 +696,143 @@ def cluster_churn(duration_s: float = 90.0):
     _row("cluster_churn.png", 0, path)
 
 
+# Beyond-paper: the survivability ladder — what each mitigation layer
+# buys as spot churn climbs. Long contexts (2k-token prompts, 512-token
+# median outputs) make re-prefill genuinely expensive, which is the
+# regime live KV migration targets. Three arms per kill rate:
+#   no-mitigation  — kills land with no warning (warning_s=0): no drain,
+#                    no pre-kill checkpoint, full re-prefill
+#   re-prefill     — the PR 6 default: 5s drain window, losers
+#                    re-prefill from scratch
+#   migrate+ladder — pre-copy KV migration racing the deadline plus the
+#                    overload degradation ladder (breaker -> shed)
+# The high-churn ordering (migrate+ladder > re-prefill > no-mitigation
+# on goodput at equal-or-better TPOT p99) is pinned in
+# tests/test_survivability.py.
+def cluster_survivability(duration_s: float = 90.0):
+    import os
+
+    from repro.core.cluster import (ClusterConfig, DegradationConfig,
+                                    KVMigrationConfig, simulate_cluster)
+    from repro.core.prefill_pool import PrefillPoolConfig
+    from repro.core.router import RouterConfig
+    from repro.serving.trace import FailureConfig, TraceConfig
+
+    rcfg = RouterConfig()
+    rates = (0.0, 2.0, 5.0, 10.0)
+    base = generate(TraceConfig(
+        duration_s=duration_s, mean_rps=8.0, burstiness=0.8,
+        rate_amplitude=0.1, prompt_median=2048, output_median=512,
+        output_max=1024, seed=1))
+    arms = {
+        "no-mitigation": dict(warning_s=0.0, migration=None,
+                              degradation=None),
+        "re-prefill": dict(warning_s=5.0, migration=None,
+                           degradation=None),
+        "migrate+ladder": dict(warning_s=5.0,
+                               migration=KVMigrationConfig(),
+                               degradation=DegradationConfig()),
+    }
+    out = {}
+    for rate in rates:
+        for arm, kw in arms.items():
+            if rate == 0 and arm != "re-prefill":
+                continue
+            failures = None if rate == 0 else FailureConfig(
+                rate_per_min=rate, warning_s=kw["warning_s"],
+                checkpoint_interval_s=15.0, seed=9)
+            t0 = time.time()
+            res = simulate_cluster(
+                LLAMA, LLAMA, _clone(base), SimConfig(mode="harli",
+                                                      seed=2),
+                ClusterConfig(n_initial=3, router=rcfg,
+                              prefill_mode="pooled",
+                              prefill=PrefillPoolConfig(),
+                              failures=failures,
+                              migration=kw["migration"],
+                              degradation=kw["degradation"]))
+            out[(arm, rate)] = res
+            s = res.stats
+            _row(f"cluster_survivability,{arm},rate{rate:g}",
+                 (time.time() - t0) * 1e6,
+                 f"goodput={s.goodput:.2f}|attain={s.slo_attainment:.3f}"
+                 f"|ttft_p99={s.ttft_p99:.2f}"
+                 f"|tpot_p99_ms={s.tpot_p99*1e3:.1f}"
+                 f"|kills={res.failures}"
+                 f"|requeued={res.requeued_requests}"
+                 f"|migrated={res.migrated_requests}"
+                 f"|mig_kv_tokens={res.migrated_kv_tokens}"
+                 f"|mig_reprefills={res.migration_reprefills}"
+                 f"|shed={res.shed_requests}"
+                 f"|shed_rejected={res.shed_rejected}"
+                 f"|ladder_peak={res.ladder_peak}")
+    # no kills: warning windows and migration never fire, and the ladder
+    # thresholds are calibrated to stay disarmed on a healthy fleet —
+    # all three arms share the rate-0 origin run
+    for arm in arms:
+        out.setdefault((arm, 0.0), out[("re-prefill", 0.0)])
+    for rate in rates[1:]:
+        none_ = out[("no-mitigation", rate)]
+        rep = out[("re-prefill", rate)]
+        mig = out[("migrate+ladder", rate)]
+        _row(f"cluster_survivability.summary,rate{rate:g}", 0,
+             f"reprefill_vs_none="
+             f"{rep.stats.goodput/max(none_.stats.goodput, 1e-9):.2f}x"
+             f"|mig_vs_reprefill="
+             f"{mig.stats.goodput/max(rep.stats.goodput, 1e-9):.2f}x")
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        _row("cluster_survivability.png", 0, "skipped_no_matplotlib")
+        return
+
+    C = {"no-mitigation": "#b3261e", "re-prefill": "#eb6834",
+         "migrate+ladder": "#1baf7a", "ink": "#0b0b0b",
+         "ink2": "#52514e", "grid": "#e4e3df", "surface": "#fcfcfb",
+         "slo": "#b3261e"}
+    tpot_limit_ms = rcfg.tpot_slo_s * rcfg.tpot_slack * 1e3
+    panels = [
+        ("goodput (req/s)", lambda r: r.stats.goodput, None),
+        ("TTFT p99 (s)", lambda r: r.stats.ttft_p99, rcfg.ttft_slo_s),
+        ("TPOT p99 (ms)", lambda r: r.stats.tpot_p99 * 1e3,
+         tpot_limit_ms),
+    ]
+    fig, axes = plt.subplots(1, 3, figsize=(9.0, 3.1),
+                             facecolor=C["surface"])
+    for ax, (title, get, slo) in zip(axes, panels):
+        for arm in arms:
+            ax.plot(rates, [get(out[(arm, r)]) for r in rates],
+                    marker="o", ms=3.5, lw=1.4, color=C[arm], label=arm)
+        if slo is not None:
+            ax.axhline(slo, color=C["slo"], lw=1.1, ls="--")
+        ax.set_title(title, fontsize=9.5, color=C["ink"])
+        ax.set_xlabel("kills / min", fontsize=8.5, color=C["ink2"])
+        ax.set_facecolor(C["surface"])
+        ax.grid(color=C["grid"], lw=0.6)
+        ax.set_axisbelow(True)
+        ax.tick_params(labelsize=8, colors=C["ink2"])
+        for sp in ax.spines.values():
+            sp.set_color(C["grid"])
+    axes[0].legend(fontsize=8, frameon=False)
+    fig.suptitle("Surviving preemption: live KV migration + degradation "
+                 "ladder vs re-prefill (long-context trace, harli fleet)",
+                 fontsize=10.5, color=C["ink"])
+    fig.tight_layout()
+    out_dir = os.path.join(os.path.dirname(__file__), "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "cluster_survivability.png")
+    fig.savefig(path, dpi=150, facecolor=C["surface"])
+    plt.close(fig)
+    _row("cluster_survivability.png", 0, path)
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
        fig11_throughput_qos, fig12_predictor_error, fig13_memory_timeline,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
        cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes,
-       cluster_cache_aware, cluster_churn]
+       cluster_cache_aware, cluster_churn, cluster_survivability]

@@ -7,7 +7,8 @@ throughput), QoS attainment and finetune throughput.
         [--scenario spike] [--duration 60] [--rps 10] [--instances 2] \
         [--policy predicted_latency] [--prefill-mode pooled] \
         [--prefill-workers 2] [--chunk-budget 256] [--sessions 32] \
-        [--prefix-cache-chunks 16] [--no-autoscale]
+        [--prefix-cache-chunks 16] [--no-autoscale] \
+        [--churn-rate 2 --churn-warning 5 --migration-bw 8 --ladder]
 
 or rerun a saved experiment exactly:
 
@@ -44,7 +45,8 @@ import dataclasses
 from repro.core.api import (ExperimentSpec, SpecError, available_policies,
                             resolve_policy)
 from repro.core.autoscaler import AutoscalerConfig
-from repro.core.cluster import ClusterConfig
+from repro.core.cluster import (ClusterConfig, DegradationConfig,
+                                KVMigrationConfig)
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
 from repro.core.router import RouterConfig
@@ -121,6 +123,36 @@ def build_spec(args, ap) -> ExperimentSpec:
             checkpoint_interval_s=args.churn_checkpoint_interval
             if args.churn_checkpoint_interval is not None else 20.0,
             seed=args.seed)
+    if args.migration_bw is None:
+        if args.migration_policy is not None:
+            ap.error("--migration-policy only applies with --migration-bw "
+                     "(live KV migration is off without a link)")
+        migration = None
+    else:
+        if failures is None or failures.warning_s <= 0:
+            ap.error("--migration-bw requires --churn-rate > 0 and "
+                     "--churn-warning > 0 (migration only fires on "
+                     "preemption warnings)")
+        migration = KVMigrationConfig(
+            bw_gbps=args.migration_bw,
+            policy=args.migration_policy or "kv_headroom")
+    if not args.ladder:
+        for flag, val in (("--shed-viol-frac", args.shed_viol_frac),
+                          ("--shed-backoff-base", args.shed_backoff_base),
+                          ("--shed-max-retries", args.shed_max_retries)):
+            if val is not None:
+                ap.error(f"{flag} only applies with --ladder "
+                         "(the degradation ladder is off without it)")
+        degradation = None
+    else:
+        base = DegradationConfig()
+        degradation = DegradationConfig(
+            shed_viol_frac=args.shed_viol_frac
+            if args.shed_viol_frac is not None else base.shed_viol_frac,
+            backoff_base_s=args.shed_backoff_base
+            if args.shed_backoff_base is not None else base.backoff_base_s,
+            max_retries=args.shed_max_retries
+            if args.shed_max_retries is not None else base.max_retries)
     return ExperimentSpec(
         name=f"{args.scenario}_{mode}_{args.policy}",
         inf_model=args.inf, ft_model=args.ft,
@@ -136,6 +168,8 @@ def build_spec(args, ap) -> ExperimentSpec:
             chunked=chunked,
             prefix_cache=cache,
             failures=failures,
+            migration=migration,
+            degradation=degradation,
             router=RouterConfig(policy=args.policy,
                                 ttft_slo_s=args.ttft_slo,
                                 tpot_slo_s=args.qos_ms / 1e3),
@@ -214,6 +248,27 @@ def main():
                     help="finetune checkpoint cadence in seconds on "
                          "colocated instances (default 20; requires "
                          "--churn-rate)")
+    ap.add_argument("--migration-bw", type=float, default=None,
+                    help="live KV migration link bandwidth in GB/s "
+                         "(requires --churn-rate > 0 and --churn-warning "
+                         "> 0); unset = warned instances drain in place")
+    ap.add_argument("--migration-policy", default=None,
+                    choices=available_policies("migration"),
+                    help="migration destination policy (default "
+                         "kv_headroom; requires --migration-bw)")
+    ap.add_argument("--ladder", action="store_true",
+                    help="enable the overload degradation ladder "
+                         "(finetune breaker -> load shedding -> "
+                         "hard rejection)")
+    ap.add_argument("--shed-viol-frac", type=float, default=None,
+                    help="SLO-violation fraction that escalates the "
+                         "ladder to load shedding (requires --ladder)")
+    ap.add_argument("--shed-backoff-base", type=float, default=None,
+                    help="first shed-retry backoff in seconds "
+                         "(requires --ladder)")
+    ap.add_argument("--shed-max-retries", type=int, default=None,
+                    help="shed retries before hard rejection "
+                         "(requires --ladder)")
     ap.add_argument("--no-autoscale", action="store_true")
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args()
@@ -226,10 +281,16 @@ def main():
                                           "chunk_budget",
                                           "churn_rate",
                                           "churn_warning",
-                                          "churn_checkpoint_interval"]
+                                          "churn_checkpoint_interval",
+                                          "migration_bw",
+                                          "migration_policy",
+                                          "shed_viol_frac",
+                                          "shed_backoff_base",
+                                          "shed_max_retries"]
                     if getattr(args, n) is not None]
         explicit += [f"--{n.replace('_', '-')}" for n in
-                     ("fuse_quantum", "no_autoscale") if getattr(args, n)]
+                     ("fuse_quantum", "no_autoscale", "ladder")
+                     if getattr(args, n)]
         if explicit:
             ap.error(f"--spec runs the file as-is; drop "
                      f"{', '.join(explicit)} (edit the spec instead, or "
@@ -257,6 +318,11 @@ def main():
         churn = f"  churn={cl.failures.rate_per_min:g}/min"
         if cl.failures.warning_s > 0:
             churn += f" (warn {cl.failures.warning_s:g}s)"
+    if cl.migration is not None:
+        churn += f"  migration={cl.migration.bw_gbps:g}GB/s" \
+                 f"({cl.migration.policy})"
+    if cl.degradation is not None:
+        churn += "  ladder=on"
     probe = spec.requests()
     print(f"spec={spec.name}  scenario={spec.scenario}: {len(probe)} "
           f"requests over {spec.duration_s:.0f}s "
@@ -288,6 +354,16 @@ def main():
                   f"requeued ({res.requeue_rejected} rejected), "
                   f"ft-iters lost {res.ft_lost_iterations:.1f}, "
                   f"ckpt-commits {res.checkpoint_commits}")
+        if cl.migration is not None:
+            print(f"{'':9s} migration: {res.migrated_requests} live-"
+                  f"migrated ({res.migrated_kv_tokens} KV tokens "
+                  f"shipped), {res.migration_reprefills} re-prefilled "
+                  f"after losing the race")
+        if cl.degradation is not None:
+            print(f"{'':9s} ladder: peak level {res.ladder_peak}, "
+                  f"{res.breaker_epochs} breaker epochs / "
+                  f"{res.shed_epochs} shed epochs, {res.shed_requests} "
+                  f"shed ({res.shed_rejected} hard-rejected)")
         if mode != "chained":
             print(f"{'':9s} TTFT p99={s.ttft_p99:5.2f}s = "
                   f"queue {s.ttft_queue_p99:.2f} + "

@@ -54,7 +54,7 @@ from typing import Dict, List, Optional, Tuple, Type
 PENDING = -2     # admitted; still in the prefill stage
 REJECTED = -1
 
-KINDS = ("routing", "prefill", "scaling")
+KINDS = ("routing", "prefill", "scaling", "migration")
 
 
 class PolicyNotFoundError(KeyError):
@@ -118,9 +118,12 @@ def _infer_kind(cls: type) -> str:
         return "prefill"
     if issubclass(cls, ScalingPolicy):
         return "scaling"
+    if issubclass(cls, MigrationPolicy):
+        return "migration"
     raise TypeError(
         f"{cls.__qualname__} subclasses none of RoutingPolicy / "
-        f"PrefillPlacement / ScalingPolicy; pass kind= explicitly")
+        f"PrefillPlacement / ScalingPolicy / MigrationPolicy; pass "
+        f"kind= explicitly")
 
 
 def register_policy(name: str, *, kind: Optional[str] = None):
@@ -270,6 +273,27 @@ class ScalingPolicy(abc.ABC):
     def decide(self, t: float, cfg, signals: Dict):
         """Return a ScaleDecision for control tick ``t`` given
         ``AutoscalerConfig`` ``cfg`` and this loop's signals."""
+
+
+# ------------------------------------------------------------- migration --
+class MigrationPolicy(abc.ABC):
+    """Live-KV-migration destination choice (survivability layer,
+    core/cluster.py ``KVMigrationConfig``). When an instance receives a
+    spot-style preemption warning, ``ClusterSim`` streams each victim
+    request's KV to a peer over the interconnect; this policy picks the
+    peer. Pure decision: the cluster loop owns the transfer timeline,
+    the deadline race and the re-prefill fallback.
+
+    Must be deterministic — migration happens on the seeded failure
+    path, and a nondeterministic pick would break the bit-identity
+    guarantees the churn tests pin."""
+
+    name: str = ""
+
+    @abc.abstractmethod
+    def pick_dest(self, req, cand: List, router):
+        """Choose the destination instance for ``req``'s KV from the
+        non-empty candidate list (serving peers, victim excluded)."""
 
 
 def __getattr__(name: str):

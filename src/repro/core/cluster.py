@@ -45,9 +45,12 @@ Modes mirror the single-instance experiment (paper §8.1) at fleet scale:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import tempfile
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core import api
 from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
@@ -64,6 +67,62 @@ from repro.serving.request import Request
 from repro.serving.trace import FailureConfig, FailureSchedule
 
 ROUTER_SEED_SALT = 17        # RouterConfig.seed derives from SimConfig.seed
+SHED_SEED_SALT = 53987       # backoff-jitter stream (DegradationConfig.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVMigrationConfig:
+    """Live KV migration on a preemption warning (survivability layer).
+
+    When an instance receives a spot-style notice (``FailureConfig.
+    warning_s > 0``), the cluster streams each victim request's KV to a
+    peer over the interconnect, racing the deadline kill: transfers that
+    finish in time land the request on the destination with its context
+    intact; losers fall back to the PR 6 re-prefill path — partially,
+    when some prefix tokens made it across before the kill."""
+
+    # victim egress interconnect bandwidth (the serialized link every
+    # transfer shares). Typical datacenter ICI/NVLink-over-fabric ballpark
+    bw_gbps: float = 8.0
+    setup_s: float = 0.005           # per-request transfer handshake
+    # registered migration destination policy (core/policies/migration.py)
+    policy: str = "kv_headroom"
+
+    @property
+    def bw_bytes(self) -> float:
+        return self.bw_gbps * 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationConfig:
+    """Overload degradation ladder, escalated one deterministic step per
+    epoch off the fleet's recent request-level SLO-violation fraction
+    (``ClusterRouter.recent_slo_violation_frac``):
+
+      level 1 — fleet-wide finetune circuit breaker: every colocated
+                quantum yields to inference (``DecodeInstanceSim.
+                ft_breaker``) until the violation fraction recovers;
+      level 2 — admission-control load shedding: arrivals re-enter after
+                a seeded jittered exponential backoff (priced into TTFT
+                via ``Request.retries``), hard-rejected past the cap.
+
+    De-escalation steps down one level per epoch once the violation
+    fraction drops under ``resume_viol_frac``. Thresholds are calibrated
+    against the request-level signal: a healthy loaded fleet sits well
+    above zero (churn requeues and TTFT tails count), so the breaker
+    arms at a clear excursion and shedding only at near-collapse."""
+
+    breaker_viol_frac: float = 0.35  # escalate 0 -> 1 at this violation frac
+    shed_viol_frac: float = 0.70     # escalate 1 -> 2
+    resume_viol_frac: float = 0.15   # de-escalate one level below this
+    shed: bool = True                # enable level 2 at all
+    backoff_base_s: float = 1.0      # first retry delay
+    backoff_mult: float = 2.0        # exponential growth per retry
+    backoff_jitter: float = 0.25     # uniform +/- fraction, own RNG stream
+    max_retries: int = 3             # then hard rejection (shed_rejected)
+    # None = derive from the experiment seed (SimConfig.seed + SHED_SEED_
+    # SALT); any int — including 0 — is explicit and honored as-is
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -96,6 +155,12 @@ class ClusterConfig:
     # cadence. None (default) = stable fleet, bit-identical to the
     # pre-failure-layer behaviour
     failures: Optional[FailureConfig] = None
+    # live KV migration on preemption warnings; None (default) = warned
+    # instances drain in place and their remnants re-prefill (PR 6 path)
+    migration: Optional[KVMigrationConfig] = None
+    # overload degradation ladder (finetune breaker -> load shedding ->
+    # hard rejection); None (default) = no ladder, PR 6 behaviour
+    degradation: Optional[DegradationConfig] = None
 
     def resolved_mode(self) -> str:
         mode = self.prefill_mode
@@ -140,6 +205,15 @@ class ClusterResult:
     requeue_rejected: int = 0        # lost requests no survivor could absorb
     ft_lost_iterations: float = 0.0  # finetune progress rolled back by kills
     checkpoint_commits: int = 0
+    # survivability layer (ClusterConfig.migration / .degradation)
+    migrated_requests: int = 0       # KV transfers that beat the deadline
+    migration_reprefills: int = 0    # warned-instance remnants requeued
+    migrated_kv_tokens: int = 0      # KV tokens shipped (full + partial)
+    shed_requests: int = 0           # ladder level-2 backoff events
+    shed_rejected: int = 0           # shed past max_retries (hard rejects)
+    breaker_epochs: int = 0          # epochs at ladder level >= 1
+    shed_epochs: int = 0             # epochs at ladder level >= 2
+    ladder_peak: int = 0             # highest ladder level reached
 
 
 class ClusterSim:
@@ -193,6 +267,35 @@ class ClusterSim:
         self._requeued = 0
         self._requeue_rejected = 0
         self._ft_lost_iterations = 0.0
+        # ---- survivability layer (migration + degradation ladder) -------
+        mig = cluster.migration
+        self._migration_on = mig is not None and mig.bw_gbps > 0
+        self._mig_policy: Optional[api.MigrationPolicy] = None
+        if self._migration_on:
+            self._mig_policy = api.resolve_policy(
+                "migration", mig.policy)()
+        # rid -> (dest inst id, tokens shipped, transfer-complete?); filled
+        # at the preemption warning, consumed at the deadline kill. Stale
+        # entries for requests that finish during the drain window are
+        # harmless — rids are never reused
+        self._mig_plan: Dict[int, Tuple[int, int, bool]] = {}
+        self._migrated = 0
+        self._migration_reprefills = 0
+        self._migrated_tokens = 0
+        deg = cluster.degradation
+        self._ladder_level = 0
+        self._ladder_peak = 0
+        self._breaker_epochs = 0
+        self._shed_epochs = 0
+        self._shed = 0
+        self._retry_heap: List[Tuple[float, int, Request]] = []
+        self._shed_rng = None
+        if deg is not None:
+            # own jitter stream: creating it only when the ladder exists
+            # keeps the deg=None path bit-identical to PR 6
+            self._shed_rng = np.random.default_rng(
+                deg.seed if deg.seed is not None
+                else sim.seed + SHED_SEED_SALT)
         if sim.mode == "separate":
             for _ in range(max(cluster.n_initial - 1, 1)):
                 self._spawn(0.0, role="decode", colocate=False)
@@ -223,6 +326,8 @@ class ClusterSim:
             serves_inference=serves_inference, t0=t, role=role,
             prefix_cache=self.cluster.prefix_cache, ckpt=ckpt,
             **self.placement.spawn_kwargs(self, serves_inference))
+        # a joiner during an active breaker epoch inherits the pause
+        inst.ft_breaker = self._ladder_level >= 1
         self._next_id += 1
         self.router.add_instance(inst, now=t)
         return inst
@@ -291,9 +396,7 @@ class ClusterSim:
             if cl.failures is not None else None
         while t < duration:
             epoch_end = min(t + cl.tick_s, duration)
-            while qi < len(pending) and pending[qi].arrival <= epoch_end:
-                self.router.dispatch(pending[qi], pending[qi].arrival)
-                qi += 1
+            qi = self._dispatch_arrivals(pending, qi, epoch_end)
             # prefill stage first: completions in this epoch reach their
             # decode instance before it steps through the epoch
             self.router.pump_prefill(epoch_end)
@@ -308,6 +411,11 @@ class ClusterSim:
                 # control slot: the autoscaler's decode loop sees the
                 # shrunken snapshot the same epoch and replaces capacity
                 self._apply_failures(failsched, epoch_end)
+            if cl.degradation is not None:
+                # ladder after failures, before the control slot: the
+                # autoscaler and the breaker react to the same signal in
+                # the same epoch (the ladder is faster — no cooldown)
+                self._ladder_tick(epoch_end)
             if cl.autoscale and epoch_end + 1e-9 >= next_control:
                 viol = self.router.recent_violation_frac()
                 d = self.autoscaler.evaluate(
@@ -326,8 +434,85 @@ class ClusterSim:
                         next_control += cl.autoscaler.interval_s
             t = epoch_end
             self._fleet_point(t, self._serving())
+        # requests still backing off at trace end never dispatched: record
+        # them as hard-rejected so offered-request accounting stays honest
+        for _, _, req in sorted(self._retry_heap):
+            self.router.reject_shed(req)
+        self._retry_heap = []
         self.router.check_conservation()
         return self._result(duration)
+
+    def _dispatch_arrivals(self, pending: List[Request], qi: int,
+                           epoch_end: float) -> int:
+        """Offer this epoch's traffic to the router in time order: fresh
+        arrivals merged with shed requests whose backoff elapsed (arrival
+        wins ties). At ladder level 2 the shed gate replaces dispatch.
+        With no degradation ladder this reduces exactly to the plain
+        arrival scan (the retry heap stays empty)."""
+        deg = self.cluster.degradation
+        while True:
+            t_arr = pending[qi].arrival if qi < len(pending) else None
+            t_re = self._retry_heap[0][0] if self._retry_heap else None
+            if t_arr is not None and (t_re is None or t_arr <= t_re):
+                if t_arr > epoch_end:
+                    break
+                req, now = pending[qi], t_arr
+                qi += 1
+            elif t_re is not None:
+                if t_re > epoch_end:
+                    break
+                now, _, req = heapq.heappop(self._retry_heap)
+            else:
+                break
+            if deg is not None and deg.shed and self._ladder_level >= 2:
+                self._shed_request(req, now, deg)
+            else:
+                self.router.dispatch(req, now)
+        return qi
+
+    def _shed_request(self, req: Request, now: float,
+                      deg: DegradationConfig) -> None:
+        """Ladder level 2: push the request back with seeded jittered
+        exponential backoff; past the retry cap it is hard-rejected. The
+        backoff lands in TTFT — the request's arrival stays its original
+        arrival, so the wait is priced, not hidden."""
+        req.retries += 1
+        if req.retries > deg.max_retries:
+            self.router.reject_shed(req)
+            return
+        backoff = deg.backoff_base_s \
+            * deg.backoff_mult ** (req.retries - 1)
+        if deg.backoff_jitter > 0:
+            backoff *= 1.0 + deg.backoff_jitter \
+                * float(self._shed_rng.uniform(-1.0, 1.0))
+        heapq.heappush(self._retry_heap, (now + backoff, req.rid, req))
+        self._shed += 1
+
+    def _ladder_tick(self, now: float) -> None:
+        """One deterministic ladder step per epoch off the fleet's recent
+        request-level SLO-violation fraction: escalate 0 -> 1 (finetune
+        breaker) -> 2 (load shedding), de-escalate one level once the
+        signal recovers. Request-level, not round-level: the QoS decode
+        scheduler keeps rounds under the TPOT budget by construction, so
+        overload shows up as TTFT misses on completed requests."""
+        deg = self.cluster.degradation
+        viol = self.router.recent_slo_violation_frac()
+        lvl = self._ladder_level
+        if lvl > 0 and viol <= deg.resume_viol_frac:
+            lvl -= 1
+        elif lvl == 0 and viol >= deg.breaker_viol_frac:
+            lvl = 1
+        elif lvl == 1 and deg.shed and viol >= deg.shed_viol_frac:
+            lvl = 2
+        if lvl != self._ladder_level:
+            self._ladder_level = lvl
+            for inst in self.router.instances.values():
+                inst.ft_breaker = lvl >= 1
+        self._ladder_peak = max(self._ladder_peak, lvl)
+        if lvl >= 1:
+            self._breaker_epochs += 1
+        if lvl >= 2:
+            self._shed_epochs += 1
 
     # -------------------------------------------------------- failures --
     def _victim_candidates(self) -> List[Tuple[str, int]]:
@@ -390,9 +575,12 @@ class ClusterSim:
                 self._kill_pool_worker(vid, now)
             elif cfg.warning_s > 0:
                 inst = self.router.instances[vid]
-                inst.begin_preempt(tk + cfg.warning_s)
-                self._pending_kills.append((tk + cfg.warning_s, vid))
+                deadline = tk + cfg.warning_s
+                inst.begin_preempt(deadline)
+                self._pending_kills.append((deadline, vid))
                 self._preemptions += 1
+                if self._migration_on:
+                    self._migrate_victim(inst, now, deadline)
             else:
                 self._kill_instance(vid, now)
         # separate mode: a killed dedicated finetune instance is replaced
@@ -404,19 +592,108 @@ class ClusterSim:
                 for i in self.router.instances.values()):
             self._spawn(now, role="finetune", serves_inference=False)
 
+    def _migrate_victim(self, victim: DecodeInstanceSim, now: float,
+                        deadline: float) -> None:
+        """Plan the live (pre-copy) KV migration off a warned instance.
+        The victim keeps serving until the deadline while its in-flight
+        KV streams to the peers the migration policy picks, serialized on
+        the victim's egress link smallest-context-first (maximizing how
+        many transfers win the race). Nothing moves yet — a request that
+        finishes during the drain window never needed to move, and KV
+        grown during the window rides the pre-copy delta stream. At the
+        deadline ``_kill_instance`` executes the plan: requests whose
+        transfer completed resume on their destination without
+        re-prefill; the first transfer that cannot finish consumes the
+        link to the deadline and ships what fits as a partial tail (the
+        destination re-prefills only the unsent remainder); everything
+        behind it falls back to the PR 6 re-prefill path."""
+        mig = self.cluster.migration
+        cand = [i for i in self.router.serving_instances()
+                if i.inst_id != victim.inst_id]
+        if not cand:
+            return                   # no peer: drain in place (PR 6)
+        cm = self.router.prefill_cm
+        bpt = self.cfg_inf.cache_bytes_per_token()
+
+        def kv_tokens(req: Request, kind: str) -> int:
+            # resident KV on the victim: full context for decoding /
+            # prefill-complete requests, chunk progress (+ cached prefix)
+            # for mid-chunked-prefill ones
+            if kind == "chunked":
+                return req.cache_hit_tokens + req.prefilled_tokens
+            return req.context_len
+
+        items = victim.migratable()
+        items.sort(key=lambda it: (kv_tokens(it[0], it[1]), it[0].rid))
+        t_link = now
+        for req, kind, ready in items:
+            toks = kv_tokens(req, kind)
+            # a pending request's KV only exists once its prefill lands
+            start = max(t_link, ready) if kind == "pending" else t_link
+            xfer = cm.kv_migration_time(toks, mig.bw_bytes, mig.setup_s)
+            # destination picked at plan time; in-flight transfers are
+            # not yet resident, so planning does not feed back into the
+            # policy's headroom signal
+            dest = self._mig_policy.pick_dest(req, cand, self.router)
+            if start + xfer <= deadline:
+                t_link = start + xfer
+                self._mig_plan[req.rid] = (dest.inst_id, toks, True)
+                continue
+            # loser: ship what the link can push before the kill as a
+            # partial tail; the request drains in place and is requeued
+            # (tail-credited) at the deadline
+            window = deadline - start - mig.setup_s
+            sent = min(int(window * mig.bw_bytes / bpt), toks) \
+                if window > 0 else 0
+            if sent > 0:
+                self._mig_plan[req.rid] = (dest.inst_id, sent, False)
+            break                    # the link is consumed to the deadline
+
     def _kill_instance(self, iid: int, now: float) -> None:
-        """Hard-kill one instance: strip its in-flight work, remove it from
-        the fleet, and re-enter every lost request through the router
-        (re-prefill at full length — its KV died with the host)."""
+        """Hard-kill one instance: strip its in-flight work, remove it
+        from the fleet, and execute the migration plan over whatever is
+        still in flight — a completed transfer resumes on its destination
+        in the stage it left (no re-prefill, the kill -> re-admit gap is
+        priced into its token timeline); a partial transfer re-prefills
+        only its unsent tail on the destination; everything else
+        re-enters through the router at full length (PR 6)."""
         inst = self.router.instances[iid]
+        warned = inst.preempt_deadline >= 0
+        # stage snapshot before the kill strips the queues: the plan's
+        # kind may be stale (a chunked prefill can finish into pending/
+        # active during the drain window)
+        kinds = {req.rid: kind for req, kind, _ in inst.migratable()} \
+            if warned and self._migration_on else {}
         lost, ft_lost = inst.kill(now)
         self._ft_lost_iterations += ft_lost
         self.router.kill_instance(iid)
         self._failures += 1
-        if lost:
-            n = self.router.requeue_failed(lost, now)
+        if not lost:
+            return
+        remnants: List[Request] = []
+        tails: Dict[int, Tuple[int, int]] = {}
+        for r in sorted(lost, key=lambda q: q.rid):
+            plan = self._mig_plan.pop(r.rid, None)
+            if plan is not None and plan[2]:
+                dest = self.router.instances.get(plan[0])
+                if dest is not None and dest.serves_inference \
+                        and dest.role != "finetune" and not dest.draining:
+                    self.router.migrate(r, dest, now,
+                                        kinds.get(r.rid, "active"))
+                    self._migrated += 1
+                    self._migrated_tokens += plan[1]
+                    continue
+                plan = None          # the copy's host died too: full re-prefill
+            if plan is not None and plan[1] > 0:
+                tails[r.rid] = (plan[0], plan[1])
+                self._migrated_tokens += plan[1]
+            remnants.append(r)
+        if remnants:
+            if self._migration_on and warned:
+                self._migration_reprefills += len(remnants)
+            n = self.router.requeue_failed(remnants, now, tails=tails)
             self._requeued += n
-            self._requeue_rejected += len(lost) - n
+            self._requeue_rejected += len(remnants) - n
 
     def _kill_pool_worker(self, wid: int, now: float) -> None:
         """Kill one pooled prefill worker: the batch it was running dies
@@ -468,6 +745,14 @@ class ClusterSim:
         res.requeued_requests = self._requeued
         res.requeue_rejected = self._requeue_rejected
         res.ft_lost_iterations = self._ft_lost_iterations
+        res.migrated_requests = self._migrated
+        res.migration_reprefills = self._migration_reprefills
+        res.migrated_kv_tokens = self._migrated_tokens
+        res.shed_requests = self._shed
+        res.shed_rejected = res.stats.shed_rejected
+        res.breaker_epochs = self._breaker_epochs
+        res.shed_epochs = self._shed_epochs
+        res.ladder_peak = self._ladder_peak
         res.checkpoint_commits = sum(
             i.ckpt.commits for i in self.router.all_instances()
             if i.ckpt is not None)

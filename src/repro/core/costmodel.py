@@ -126,6 +126,19 @@ class CostModel:
         ckpt_bytes = trainable * (2.0 + 8.0)
         return ckpt_bytes / self.inst.host_dma_bw
 
+    def kv_migration_time(self, context_tokens: int, bw_bytes_per_s: float,
+                          setup_s: float = 0.0) -> float:
+        """Live KV transfer of one request to a peer instance over the
+        interconnect: the context's KV pages plus the per-request decode
+        state stream at the configured point-to-point bandwidth, after a
+        fixed handshake. Deterministic (no ``_noise()``): the migration
+        race against the preemption deadline must replay bit-identically
+        under a seed, and adding an RNG draw here would shift every
+        downstream stream of the per-instance cost models."""
+        kv_bytes = context_tokens * self.cfg.cache_bytes_per_token() \
+            + self.cfg.state_bytes()
+        return setup_s + kv_bytes / max(bw_bytes_per_s, 1.0)
+
     def prefill_batch_latency(self, prompt_lens: Sequence[int]) -> float:
         """One fused prefill launch over a batch of (possibly ragged)
         prompts: token work is additive across requests, the weight stream

@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Tuple, Union
 from repro.configs import get_config
 from repro.core import api
 from repro.core.cluster import (ClusterConfig, ClusterResult,
-                                simulate_cluster)
+                                DegradationConfig, simulate_cluster)
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.simulator import ChunkedPrefillConfig, SimConfig
 from repro.serving.request import Request
@@ -203,6 +203,61 @@ class ExperimentSpec:
                     "cluster.failures is configured but fully inert "
                     "(rate 0, no warning, no checkpointing) — drop it "
                     "(failures: null) to state the fleet is stable")
+        if cl.migration is not None:
+            m = cl.migration
+            if cl.failures is None:
+                raise SpecError(
+                    "cluster.migration is configured but failures is null "
+                    "— live KV migration only fires on preemption "
+                    "warnings; configure cluster.failures (CLI: "
+                    "--migration-bw requires --churn-rate > 0)")
+            if cl.failures.warning_s <= 0:
+                raise SpecError(
+                    "cluster.migration is configured but failures."
+                    "warning_s is 0 — hard kills leave no window to "
+                    "stream KV; set warning_s > 0 (CLI: --churn-warning)")
+            if m.bw_gbps <= 0:
+                raise SpecError(
+                    "cluster.migration.bw_gbps must be > 0 — a zero-"
+                    "bandwidth link can never move KV; drop the config "
+                    "(migration: null) to state re-prefill-only intent")
+            if m.setup_s < 0:
+                raise SpecError("cluster.migration.setup_s must be >= 0")
+            try:
+                api.resolve_policy("migration", m.policy)
+            except api.PolicyNotFoundError as e:
+                raise SpecError(str(e)) from None
+        if cl.degradation is not None:
+            g = cl.degradation
+            if not (0.0 <= g.resume_viol_frac <= g.breaker_viol_frac
+                    <= g.shed_viol_frac <= 1.0):
+                raise SpecError(
+                    "cluster.degradation thresholds must satisfy 0 <= "
+                    "resume_viol_frac <= breaker_viol_frac <= "
+                    "shed_viol_frac <= 1 — the ladder escalates through "
+                    f"them in order (got resume={g.resume_viol_frac}, "
+                    f"breaker={g.breaker_viol_frac}, "
+                    f"shed={g.shed_viol_frac})")
+            if g.backoff_base_s <= 0 or g.backoff_mult < 1.0 \
+                    or not (0.0 <= g.backoff_jitter < 1.0) \
+                    or g.max_retries < 0:
+                raise SpecError(
+                    "cluster.degradation backoff knobs out of range: "
+                    "backoff_base_s > 0, backoff_mult >= 1, 0 <= "
+                    "backoff_jitter < 1, max_retries >= 0")
+            if not g.shed:
+                base = DegradationConfig(shed=False)
+                tuned = [k for k in ("shed_viol_frac", "backoff_base_s",
+                                     "backoff_mult", "backoff_jitter",
+                                     "max_retries", "seed")
+                         if getattr(g, k) != getattr(base, k)]
+                if tuned:
+                    raise SpecError(
+                        f"cluster.degradation.shed is false but shedding "
+                        f"knob(s) {', '.join(tuned)} are configured — "
+                        "they only apply when shedding is enabled; drop "
+                        "them or set shed: true (CLI: --shed-* flags "
+                        "require the ladder with shedding on)")
         for i, ov in enumerate(cl.instance_overrides):
             if not isinstance(ov, dict):
                 raise SpecError(f"instance_overrides[{i}] must be an "

@@ -10,6 +10,8 @@ Importing this package registers every built-in policy:
                  (core/policies/placement.py)
   * scaling    — decode_fleet / pooled_prefill / chunked_budget autoscaler
                  loops (core/policies/scaling.py)
+  * migration  — kv_headroom / least_loaded live-KV-migration destination
+                 choices (core/policies/migration.py)
 
 The registry imports this package lazily on first resolve, so user code
 never needs to import it explicitly; third-party policies just call
@@ -17,6 +19,7 @@ never needs to import it explicitly; third-party policies just call
 """
 
 from repro.core.policies import cache_aware  # noqa: F401
+from repro.core.policies import migration  # noqa: F401
 from repro.core.policies import placement  # noqa: F401
 from repro.core.policies import routing  # noqa: F401
 from repro.core.policies import scaling  # noqa: F401

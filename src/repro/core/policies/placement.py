@@ -38,9 +38,13 @@ class ChainedPlacement(PrefillPlacement):
         self._free.pop(inst_id, None)
 
     def place(self, req, now, cand, router) -> int:
-        inst = router.policy.pick(cand, req, router)
-        router.credit_prefix(inst, req)
-        t_start = max(self._free[inst.inst_id], req.arrival, now)
+        # a partially-migrated request must land where its KV tail lives;
+        # the shortened effective_prompt_len prices the tail re-prefill
+        inst = router.claim_forced(req)
+        if inst is None:
+            inst = router.policy.pick(cand, req, router)
+            router.credit_prefix(inst, req)
+        t_start = max(self._free.get(inst.inst_id, now), req.arrival, now)
         ready = t_start + router.prefill_cm.prefill_latency(
             req.effective_prompt_len)
         self._free[inst.inst_id] = ready
@@ -88,9 +92,13 @@ class PooledPlacement(PrefillPlacement):
         # BEFORE the pool runs it: a pinning policy (session_affinity,
         # cache_aware) binds the instance now and the pin is honored at
         # hand-off; non-pinning policies choose at hand-off time
-        pin = router.policy.pin_for_prefill(cand, req, router)
-        if pin is not None:
-            router.credit_prefix(pin, req)
+        # a partially-migrated request is already bound to the instance
+        # holding its KV tail (router._forced, honored at hand-off) — an
+        # admission pin would fight the forced destination
+        if not router.has_forced(req.rid):
+            pin = router.policy.pin_for_prefill(cand, req, router)
+            if pin is not None:
+                router.credit_prefix(pin, req)
         self.pool.submit(req, now)
         return PENDING
 
@@ -168,8 +176,10 @@ class ChunkedPlacement(PrefillPlacement):
         # the instance itself chunks the prefill into its decode rounds;
         # load()/queue_depth include the chunk queue so admission
         # backpressure keeps working
-        inst = router.policy.pick(cand, req, router)
-        router.credit_prefix(inst, req)
+        inst = router.claim_forced(req)
+        if inst is None:
+            inst = router.policy.pick(cand, req, router)
+            router.credit_prefix(inst, req)
         inst.enqueue_chunked(req, now)
         return inst.inst_id
 

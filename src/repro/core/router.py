@@ -126,6 +126,10 @@ class ClusterStats:
     ttft_queue_p99: float = 0.0      # arrival -> prefill start
     ttft_prefill_p99: float = 0.0    # prefill start -> prefill done
     ttft_decode_wait_p99: float = 0.0  # prefill done -> first decode token
+    # degradation-ladder stage 3 (core/cluster.py DegradationConfig):
+    # requests hard-rejected after exhausting their shed-backoff retries.
+    # Counted inside ``rejected`` too — this field attributes the share
+    shed_rejected: int = 0
 
 
 def request_slo(r: Request, cfg: RouterConfig):
@@ -183,6 +187,11 @@ class ClusterRouter:
         self.routed: List[RoutedRequest] = []
         self._routed_ix: Dict[int, RoutedRequest] = {}
         self._assigned: Dict[int, int] = {}         # rid -> instance id
+        # survivability layer (core/cluster.py): rid -> forced decode
+        # destination for partially-migrated requests (the KV tail already
+        # lives there), and the ladder's hard-rejection counter
+        self._forced: Dict[int, int] = {}
+        self._shed_rejected = 0
 
     @property
     def pool(self) -> Optional[PrefillPool]:
@@ -216,11 +225,17 @@ class ClusterRouter:
         self.placement.on_retire_instance(inst_id, self)
         self.retired[inst_id] = inst
 
-    def requeue_failed(self, reqs: List[Request], now: float) -> int:
+    def requeue_failed(self, reqs: List[Request], now: float,
+                       tails: Optional[Dict[int, tuple]] = None) -> int:
         """Re-admit requests that lost their KV to an instance failure.
         Each request re-enters the normal placement path (re-prefill at
         full length — the cached context is gone) or is rejected when no
         surviving capacity can absorb it. Returns how many re-entered.
+
+        ``tails`` maps rid -> (dest instance id, migrated tokens) for
+        requests whose live KV migration lost the deadline race after a
+        partial transfer: the request re-prefills only the unsent tail,
+        forced onto the destination that already holds the sent prefix.
 
         The caller must already have detached the requests from the dead
         instance (``DecodeInstanceSim.kill``/``recall``), so deleting the
@@ -230,9 +245,20 @@ class ClusterRouter:
             rr = self._routed_ix[req.rid]
             del self._assigned[req.rid]
             req.reset_for_retry()
+            tail = (tails or {}).get(req.rid)
+            if tail is not None:
+                dest = self.instances.get(tail[0])
+                if dest is not None and dest.serves_inference \
+                        and dest.role != "finetune" and not dest.draining:
+                    # the partial KV survives on the destination: credit
+                    # it and force decode placement there
+                    req.migrated_tokens = tail[1]
+                    self._forced[req.rid] = tail[0]
             cand = [i for i in self.serving_instances()
                     if i.load() <= self.cfg.reject_load]
             if not cand or self.placement.saturated(cand, self):
+                self._forced.pop(req.rid, None)
+                req.migrated_tokens = 0
                 self._assigned[req.rid] = REJECTED
                 rr.instance = REJECTED
                 continue
@@ -246,6 +272,51 @@ class ClusterRouter:
             rr.instance = target
             n += 1
         return n
+
+    def migrate(self, req: Request, dest: DecodeInstanceSim, ready: float,
+                kind: str) -> None:
+        """Land a fully-migrated request on its destination: the KV
+        transfer beat the preemption deadline, so at the kill the request
+        re-enters the same stage it left — decoding/prefilled requests
+        join the ready queue (admissible from ``ready``), mid-chunked-
+        prefill ones keep their chunk progress and continue in the
+        destination's rounds. The caller already stripped the request
+        from the dead victim, so reassignment stays exactly-once."""
+        if kind == "chunked":
+            dest.enqueue_chunked(req, ready)
+        else:
+            dest.enqueue(req, ready)
+        self._assigned[req.rid] = dest.inst_id
+        self._routed_ix[req.rid].instance = dest.inst_id
+
+    def reject_shed(self, req: Request) -> int:
+        """Hard-reject a request the degradation ladder shed past its
+        retry budget (or that was still backing off at trace end). The
+        request was never dispatched — this is its one terminal record."""
+        assert req.rid not in self._assigned, "request routed twice"
+        self._assigned[req.rid] = REJECTED
+        self._record(req, REJECTED)
+        self._shed_rejected += 1
+        return REJECTED
+
+    def claim_forced(self, req: Request) -> Optional[DecodeInstanceSim]:
+        """Pop and return the forced migration destination for ``req``
+        (None if unforced). When the destination can no longer take
+        traffic the partial-KV credit dies with it — the request falls
+        back to full re-prefill wherever the policy sends it."""
+        iid = self._forced.pop(req.rid, None)
+        if iid is None:
+            return None
+        dest = self.instances.get(iid)
+        if dest is not None and dest.serves_inference \
+                and dest.role != "finetune" and not dest.draining:
+            return dest
+        req.migrated_tokens = 0
+        return None
+
+    def has_forced(self, rid: int) -> bool:
+        """True while ``rid`` holds an unclaimed forced destination."""
+        return rid in self._forced
 
     def recall_pending(self, rid: int) -> Optional[Request]:
         """Pull a not-yet-admitted request back from its decode instance
@@ -323,8 +394,12 @@ class ClusterRouter:
             cand = [i for i in self.instances.values()
                     if i.serves_inference and i.role != "finetune"]
         assert cand, "no inference-capable instance left in the fleet"
+        inst = self.claim_forced(req)
         pin = self.policy.claim_pin(req)
-        inst = None
+        if inst is not None:
+            # partial-migration tail: the sent KV prefix lives on the
+            # forced destination, which outranks any admission-time pin
+            pin = None
         if pin is not None:
             # instance pinned at admission (its prefix-cache credit already
             # shortened the prefill): honor the pin while the instance can
@@ -380,12 +455,37 @@ class ClusterRouter:
         lim = self.cfg.tpot_slo_s * self.cfg.tpot_slack
         return sum(1 for _, lat in recent if lat > lim) / len(recent)
 
+    def recent_slo_violation_frac(self, window: int = 50) -> float:
+        """Fraction of the last `window` COMPLETED requests that missed
+        their SLO (TTFT or TPOT, per request_slo) — the degradation
+        ladder's overload signal (core/cluster.py). Request-level on
+        purpose: the QoS scheduler keeps decode ROUNDS under the TPOT
+        budget by construction, so under overload and churn it is TTFT
+        queueing that degrades first, and only completed requests carry
+        that verdict."""
+        done: List[tuple] = []
+        for inst in self.all_instances():
+            for r in inst.all_reqs:
+                if r.finish >= 0 and r.token_times:
+                    done.append((r.finish, r.rid, r))
+        if not done:
+            return 0.0
+        done.sort()
+        recent = done[-window:]
+        bad = 0
+        for _, _, r in recent:
+            ttft_ok, tpot_ok, _, _ = request_slo(r, self.cfg)
+            if not (ttft_ok and tpot_ok):
+                bad += 1
+        return bad / len(recent)
+
     def stats(self, duration: float) -> ClusterStats:
         """Cluster goodput accounting over every request the router saw."""
         cfg = self.cfg
         st = ClusterStats(duration=duration, offered=len(self.routed),
                           dropped=sum(i.dropped
-                                      for i in self.all_instances()))
+                                      for i in self.all_instances()),
+                          shed_rejected=self._shed_rejected)
         ttfts: List[float] = []
         tpots: List[float] = []
         stage_q: List[float] = []

@@ -365,6 +365,10 @@ class DecodeInstanceSim:
         # ---- failure layer (core/cluster.py, ClusterConfig.failures) ----
         self.ckpt = ckpt if self.colocate else None
         self.preempt_deadline = -1.0     # >= 0: spot-style notice received
+        # degradation-ladder stage 1 (core/cluster.py DegradationConfig):
+        # fleet-wide finetune circuit breaker — colocated quantum forced
+        # to 0 until the violation fraction recovers
+        self.ft_breaker = False
         self.killed_at = -1.0            # >= 0: hard-killed at this time
         self.active: List[Request] = []
         self._pending: List[Tuple[float, int, Request]] = []   # ready heap
@@ -422,6 +426,36 @@ class DecodeInstanceSim:
                 self.all_reqs = [r for r in self.all_reqs if r.rid != rid]
                 return req
         return None
+
+    def migratable(self) -> List[Tuple[Request, str, float]]:
+        """In-flight requests a live KV migration could move off this
+        instance, as ``(request, kind, ready_time)`` — kind tells the
+        router which queue the request re-enters on the destination:
+        ``active`` (decoding, full context resident), ``pending`` (prefill
+        done, KV waiting for admission) or ``chunked`` (mid chunked
+        prefill). Deterministic order: active by rid, then the queues in
+        heap-key order."""
+        out: List[Tuple[Request, str, float]] = []
+        for r in sorted(self.active, key=lambda r: r.rid):
+            out.append((r, "active", self.t))
+        for ready, _, req in sorted(self._pending):
+            out.append((req, "pending", ready))
+        for arr, _, req in sorted(self._chunk_pending):
+            out.append((req, "chunked", arr))
+        return out
+
+    def kv_headroom_chunks(self) -> int:
+        """Free KV admission budget under the conservative reservation
+        ``_can_admit`` uses (prompt + max output for every in-flight
+        request) — the signal the default migration destination policy
+        ranks candidates by."""
+        tok = sum(r.prompt_len + r.max_new_tokens for r in self.active)
+        tok += sum(req.prompt_len + req.max_new_tokens
+                   for _, _, req in self._pending)
+        tok += sum(req.prompt_len + req.max_new_tokens
+                   for _, _, req in self._chunk_pending)
+        return self.kv_budget_chunks \
+            - math.ceil(tok / self.alloc.tokens_per_chunk)
 
     def begin_preempt(self, deadline: float) -> None:
         """Spot-style preemption notice: drain gracefully until
@@ -495,6 +529,13 @@ class DecodeInstanceSim:
         if self.preempt_deadline >= 0:
             # preemption notice: the job committed its final checkpoint in
             # begin_preempt and stops — remaining rounds drain decode only
+            return 0
+        if self.ft_breaker and self.role == "colocated":
+            # fleet past QoS headroom: every colocated quantum yields to
+            # inference until the breaker resets. Dedicated finetune
+            # instances are exempt — pausing them frees no decode capacity
+            if bs > 0:
+                self.ft.stall_rounds += 1
             return 0
         if self.ckpt is not None:
             if self.ckpt.busy(t):

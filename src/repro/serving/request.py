@@ -39,6 +39,14 @@ class Request:
     # times the request lost its KV to an instance failure and re-entered
     # the router (cluster failure layer, core/cluster.py)
     restarts: int = 0
+    # prompt-position tokens whose KV already arrived on the forced
+    # destination via live migration (survivability layer): a partial
+    # transfer that lost the preemption race re-prefills only the unsent
+    # tail. Cleared by reset_for_retry alongside the cache-hit credit.
+    migrated_tokens: int = 0
+    # admission-control shed count (degradation ladder): each shed re-entry
+    # waits a seeded jittered exponential backoff that lands in TTFT
+    retries: int = 0
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -48,9 +56,12 @@ class Request:
     @property
     def effective_prompt_len(self) -> int:
         """Prompt tokens that actually need prefill compute: the prefix-cache
-        hit is already resident on the target instance. KV accounting still
-        charges the full prompt (the cached prefix occupies cache capacity)."""
-        return max(self.prompt_len - self.cache_hit_tokens, 1)
+        hit is already resident on the target instance, and migrated KV
+        (partial or full transfers that beat the preemption deadline) is
+        likewise already on the destination. KV accounting still charges
+        the full prompt (resident prefixes occupy cache capacity)."""
+        return max(self.prompt_len - self.cache_hit_tokens
+                   - self.migrated_tokens, 1)
 
     def tpot_samples(self) -> List[float]:
         """Per-output-token latencies (decode QoS metric)."""
@@ -65,6 +76,7 @@ class Request:
         — already-emitted tokens happened, and the re-prefill gap shows up
         between consecutive token times as the churn TPOT penalty."""
         self.cache_hit_tokens = 0
+        self.migrated_tokens = 0
         self.prefilled_tokens = 0
         self.prefill_start = -1.0
         self.prefill_done = -1.0

@@ -1,0 +1,285 @@
+"""Survivability layer (live KV migration + overload degradation ladder):
+transfer-time arithmetic, migration-credit bookkeeping, seeded determinism,
+request conservation with migration in every prefill mode, the knobs-off
+bit-identity guarantee, ladder escalation/shedding under overload, spec
+validation of contradictory churn combos, and the high-churn acceptance
+pin (migration + ladder strictly beats re-prefill-only on goodput at
+equal-or-better TPOT p99)."""
+
+import dataclasses
+import functools
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import api
+from repro.core.cluster import (ClusterConfig, DegradationConfig,
+                                KVMigrationConfig, simulate_cluster)
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.experiment import ExperimentSpec, SpecError
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.router import RouterConfig
+from repro.core.simulator import SimConfig
+from repro.serving.request import Request
+from repro.serving.trace import (FailureConfig, TraceConfig, generate,
+                                 scenario_config)
+
+LLAMA = get_config("llama3-8b")
+
+# long-context / long-output trace: requests live long enough for kills to
+# catch them mid-decode and re-prefill is expensive enough for live
+# migration to matter
+LONG_TRACE = TraceConfig(duration_s=90.0, mean_rps=8.0, burstiness=0.8,
+                         rate_amplitude=0.1, prompt_median=2048,
+                         output_median=512, output_max=1024, seed=1)
+CHURN = FailureConfig(rate_per_min=10.0, warning_s=5.0,
+                      checkpoint_interval_s=15.0, seed=9)
+MODE_KW = {
+    "chained": dict(prefill_mode="chained", prefill=None),
+    "pooled": dict(prefill_mode="pooled", prefill=PrefillPoolConfig()),
+    "chunked": dict(prefill_mode="chunked", prefill=None),
+}
+
+
+def _run(mig=None, deg=None, failures=CHURN, mode="pooled", n=3, seed=2,
+         trace=LONG_TRACE, autoscale=True):
+    return simulate_cluster(
+        LLAMA, LLAMA, generate(trace), SimConfig(mode="harli", seed=seed),
+        ClusterConfig(n_initial=n, autoscale=autoscale,
+                      router=RouterConfig(), failures=failures,
+                      migration=mig, degradation=deg, **MODE_KW[mode]))
+
+
+@functools.lru_cache(maxsize=None)
+def _acceptance(arm: str):
+    """The three acceptance arms, cached across tests."""
+    if arm == "reprefill":
+        return _run()
+    if arm == "migrate":
+        return _run(mig=KVMigrationConfig())
+    return _run(mig=KVMigrationConfig(), deg=DegradationConfig())
+
+
+# ------------------------------------------------------ cost model ----
+def test_kv_migration_time_arithmetic():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=0)
+    bw = 8e9
+    t = cm.kv_migration_time(1024, bw, setup_s=0.005)
+    expect = 0.005 + (1024 * LLAMA.cache_bytes_per_token()
+                      + LLAMA.state_bytes()) / bw
+    assert t == pytest.approx(expect)
+    # deterministic: no RNG draw, so repeat calls are bit-identical
+    assert cm.kv_migration_time(1024, bw) == cm.kv_migration_time(1024, bw)
+    # a dead link degenerates to the 1 B/s floor, never divides by zero
+    assert cm.kv_migration_time(1, 0.0) > 0
+
+
+def test_migrated_tokens_shorten_effective_prefill():
+    r = Request(rid=0, arrival=0.0, prompt_len=1000, max_new_tokens=10)
+    assert r.effective_prompt_len == 1000
+    r.migrated_tokens = 400
+    assert r.effective_prompt_len == 600
+    r.cache_hit_tokens = 300
+    assert r.effective_prompt_len == 300
+    r.reset_for_retry()              # the credit dies with a later failure
+    assert r.migrated_tokens == 0 and r.effective_prompt_len == 1000
+    assert r.restarts == 1
+
+
+def test_migration_policies_registered():
+    assert "migration" in api.KINDS
+    for name in ("kv_headroom", "least_loaded"):
+        cls = api.resolve_policy("migration", name)
+        assert issubclass(cls, api.MigrationPolicy)
+
+
+# ---------------------------------------------------- determinism ----
+def test_migration_deterministic_across_reruns():
+    a = _acceptance("migrate")
+    b = _run(mig=KVMigrationConfig())
+    assert a.stats == b.stats
+    assert a.migrated_requests == b.migrated_requests
+    assert a.migrated_kv_tokens == b.migrated_kv_tokens
+    assert a.migration_reprefills == b.migration_reprefills
+    assert a.fleet_timeline == b.fleet_timeline
+
+
+def test_migration_seed_sensitive():
+    a = _acceptance("migrate")
+    c = _run(mig=KVMigrationConfig(), seed=3)
+    assert a.stats != c.stats
+
+
+# --------------------------------------- conservation in every mode ----
+@pytest.mark.parametrize("mode", sorted(MODE_KW))
+def test_migration_conserves_requests(mode):
+    trace = dataclasses.replace(LONG_TRACE, duration_s=60.0)
+    res = _run(mig=KVMigrationConfig(), mode=mode, trace=trace)
+    # simulate_cluster runs ClusterRouter.check_conservation internally;
+    # reaching here means every request is rejected xor staged xor placed
+    # exactly once even after live moves across instances
+    assert res.migrated_requests > 0
+    assert res.stats.offered == res.stats.routed + res.stats.rejected
+
+
+def test_partial_tail_on_slow_link():
+    # ~10 MB/s can rarely ship a median 2k-token context inside the 5 s
+    # warning: almost every transfer loses the race, and the losing head
+    # still ships a partial tail that shortens its re-prefill
+    trace = dataclasses.replace(LONG_TRACE, duration_s=60.0)
+    slow = _run(mig=KVMigrationConfig(bw_gbps=0.01), trace=trace)
+    fast = _run(mig=KVMigrationConfig(), trace=trace)
+    assert slow.migrated_requests < fast.migrated_requests
+    assert slow.migration_reprefills > 0
+    assert slow.migrated_kv_tokens > 0         # partial tails still shipped
+
+
+# ------------------------------------------------ knobs-off identity ----
+def test_bw_zero_bit_identical_to_no_migration():
+    trace = dataclasses.replace(LONG_TRACE, duration_s=60.0)
+    a = _run(trace=trace)
+    b = _run(mig=KVMigrationConfig(bw_gbps=0.0), trace=trace)
+    assert a.stats == b.stats
+    assert a.fleet_timeline == b.fleet_timeline
+    assert [d.action for d in a.decisions] == [d.action for d in b.decisions]
+    assert a.ft_throughput == b.ft_throughput
+    assert b.migrated_requests == 0 and b.migrated_kv_tokens == 0
+
+
+def test_unreachable_ladder_bit_identical_to_no_ladder():
+    trace = dataclasses.replace(LONG_TRACE, duration_s=60.0)
+    a = _run(trace=trace)
+    b = _run(deg=DegradationConfig(breaker_viol_frac=2.0,
+                                   shed_viol_frac=2.0,
+                                   resume_viol_frac=0.0), trace=trace)
+    assert a.stats == b.stats
+    assert a.fleet_timeline == b.fleet_timeline
+    assert b.ladder_peak == 0 and b.shed_requests == 0
+    assert b.breaker_epochs == 0 and b.shed_epochs == 0
+
+
+# ------------------------------------------------- degradation ladder ----
+# bursty spikes on a pinned two-instance fleet: TTFT misses pile up
+# mid-run, so the ladder escalates while arrivals are still flowing
+OVERLOAD = scenario_config("spike", 60.0, 20.0, seed=1)
+EAGER = DegradationConfig(breaker_viol_frac=0.2, shed_viol_frac=0.4,
+                          resume_viol_frac=0.05)
+
+
+@functools.lru_cache(maxsize=None)
+def _overload(with_ladder: bool):
+    deg = EAGER if with_ladder else None
+    return _run(deg=deg, failures=None, mode="pooled", n=2,
+                trace=OVERLOAD, autoscale=False)
+
+
+def test_ladder_escalates_and_sheds_under_overload():
+    res = _overload(True)
+    assert res.ladder_peak == 2
+    assert res.breaker_epochs > 0
+    assert res.shed_epochs > 0
+    assert res.shed_requests > 0
+    assert res.shed_rejected > 0
+    # hard-rejected shed requests are terminal rejects, attributed in both
+    # the ladder counter and the router's reject accounting
+    assert res.stats.shed_rejected == res.shed_rejected
+    assert res.stats.rejected >= res.shed_rejected
+    # escalation is ordered: shedding only happens while the breaker holds
+    assert res.breaker_epochs >= res.shed_epochs
+
+
+def test_breaker_stalls_colocated_finetune():
+    assert _overload(True).ft_stall_rounds > _overload(False).ft_stall_rounds
+
+
+def test_shed_backoff_deterministic_and_seed_isolated():
+    a = _overload(True)
+    b = _run(deg=EAGER, failures=None, mode="pooled", n=2,
+             trace=OVERLOAD, autoscale=False)
+    assert a.stats == b.stats and a.shed_requests == b.shed_requests
+    # an explicit backoff seed is honored without touching the sim streams
+    c = _run(deg=dataclasses.replace(EAGER, seed=123), failures=None,
+             mode="pooled", n=2, trace=OVERLOAD, autoscale=False)
+    d = _run(deg=dataclasses.replace(EAGER, seed=123), failures=None,
+             mode="pooled", n=2, trace=OVERLOAD, autoscale=False)
+    assert c.stats == d.stats
+
+
+# -------------------------------------------------- acceptance pin ----
+def test_migration_beats_reprefill_at_high_churn():
+    """The PR's headline regression pin: at high churn (10 kills/min,
+    5 s warnings, long contexts) live migration strictly improves
+    goodput over the PR 6 re-prefill-only path, the full ladder on top
+    improves it further, and TPOT p99 never degrades."""
+    base = _acceptance("reprefill")
+    mig = _acceptance("migrate")
+    full = _acceptance("full")
+    assert mig.migrated_requests > 0 and mig.migration_reprefills > 0
+    assert mig.stats.goodput > base.stats.goodput
+    assert full.stats.goodput > mig.stats.goodput
+    assert mig.stats.tpot_p99 <= base.stats.tpot_p99 + 1e-9
+    assert full.stats.tpot_p99 <= base.stats.tpot_p99 + 1e-9
+    # the ladder engaged (breaker epochs) rather than winning by accident
+    assert full.breaker_epochs > 0
+
+
+# ------------------------------------------------- spec validation ----
+def _spec(**cluster_kw):
+    cl = ClusterConfig(n_initial=2, prefill_mode="pooled",
+                       prefill=PrefillPoolConfig(),
+                       failures=FailureConfig(rate_per_min=2.0,
+                                              warning_s=5.0,
+                                              checkpoint_interval_s=15.0,
+                                              seed=7))
+    for k, v in cluster_kw.items():
+        setattr(cl, k, v)
+    return ExperimentSpec(name="t", inf_model="llama3-8b",
+                          ft_model="llama3-8b", scenario="steady",
+                          duration_s=10.0, mean_rps=2.0, seed=0,
+                          sim=SimConfig(mode="harli", seed=1), cluster=cl)
+
+
+def test_validate_accepts_survivability_spec():
+    _spec(migration=KVMigrationConfig(),
+          degradation=DegradationConfig()).validate()
+
+
+@pytest.mark.parametrize("cluster_kw,match", [
+    (dict(migration=KVMigrationConfig(), failures=None),
+     "failures is null"),
+    (dict(migration=KVMigrationConfig(),
+          failures=FailureConfig(rate_per_min=2.0, warning_s=0.0,
+                                 checkpoint_interval_s=15.0, seed=7)),
+     "warning_s is 0"),
+    (dict(migration=KVMigrationConfig(bw_gbps=0.0)), "bw_gbps must be > 0"),
+    (dict(migration=KVMigrationConfig(setup_s=-1.0)), "setup_s"),
+    (dict(migration=KVMigrationConfig(policy="nope")), "nope"),
+    (dict(degradation=DegradationConfig(breaker_viol_frac=0.8,
+                                        shed_viol_frac=0.5)),
+     "escalates through them in order"),
+    (dict(degradation=DegradationConfig(resume_viol_frac=0.5,
+                                        breaker_viol_frac=0.4)),
+     "escalates through them in order"),
+    (dict(degradation=DegradationConfig(backoff_mult=0.5)),
+     "backoff knobs out of range"),
+    (dict(degradation=DegradationConfig(backoff_jitter=1.0)),
+     "backoff knobs out of range"),
+    (dict(degradation=DegradationConfig(max_retries=-1)),
+     "backoff knobs out of range"),
+    (dict(degradation=DegradationConfig(shed=False, max_retries=5)),
+     "shed is false"),
+    (dict(degradation=DegradationConfig(shed=False, backoff_base_s=2.0)),
+     "shed is false"),
+])
+def test_validate_rejects_contradictory_churn_combos(cluster_kw, match):
+    with pytest.raises(SpecError, match=match):
+        _spec(**cluster_kw).validate()
+
+
+def test_spec_roundtrip_preserves_survivability_blocks():
+    spec = _spec(migration=KVMigrationConfig(bw_gbps=4.0, policy="least_loaded"),
+                 degradation=DegradationConfig(max_retries=5))
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again.cluster.migration == spec.cluster.migration
+    assert again.cluster.degradation == spec.cluster.degradation
+    again.validate()
