@@ -36,7 +36,8 @@ def main() -> None:
                        "cluster_prefill_modes": 40.0,
                        "cluster_cache_aware": 40.0,
                        "cluster_churn": 40.0,
-                       "cluster_survivability": 40.0}
+                       "cluster_survivability": 40.0,
+                       "cluster_adapter_serving": 40.0}
     for fn in F.ALL:
         if args.only and args.only not in fn.__name__:
             continue

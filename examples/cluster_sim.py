@@ -8,7 +8,8 @@ throughput), QoS attainment and finetune throughput.
         [--policy predicted_latency] [--prefill-mode pooled] \
         [--prefill-workers 2] [--chunk-budget 256] [--sessions 32] \
         [--prefix-cache-chunks 16] [--no-autoscale] \
-        [--churn-rate 2 --churn-warning 5 --migration-bw 8 --ladder]
+        [--churn-rate 2 --churn-warning 5 --migration-bw 8 --ladder] \
+        [--tenants 4 --adapters --adapter-policy affinity_packed]
 
 or rerun a saved experiment exactly:
 
@@ -37,11 +38,19 @@ With ``--sessions > 0`` every serving instance gets a session prefix
 cache, so cache-aware routing (``session_affinity`` / ``cache_aware``)
 shortens effective prefill on hits; ``--prefix-cache-chunks 0`` disables
 it (the PR 3 cache-less baseline).
+
+``--tenants N`` splits the trace across N tenants (skewed harmonic
+weights) with per-tenant attainment reporting; adding ``--adapters``
+closes the finetune->serve loop — each tenant's colocated finetune job
+publishes versioned LoRA adapters that decode instances hot-load on
+demand (weight bytes charged to the unified allocator). ``--static-
+adapters`` freezes publication at v1 (the static-deployment baseline).
 """
 
 import argparse
 import dataclasses
 
+from repro.core.adapters import AdapterServingConfig, TenantConfig
 from repro.core.api import (ExperimentSpec, SpecError, available_policies,
                             resolve_policy)
 from repro.core.autoscaler import AutoscalerConfig
@@ -153,11 +162,48 @@ def build_spec(args, ap) -> ExperimentSpec:
             if args.shed_backoff_base is not None else base.backoff_base_s,
             max_retries=args.shed_max_retries
             if args.shed_max_retries is not None else base.max_retries)
+    if args.tenants is None or args.tenants <= 0:
+        for flag, val in (("--adapter-rank", args.adapter_rank),
+                          ("--adapter-publish-iters",
+                           args.adapter_publish_iters),
+                          ("--adapter-policy", args.adapter_policy)):
+            if val is not None:
+                ap.error(f"{flag} only applies with --tenants >= 1 and "
+                         "--adapters")
+        if args.adapters or args.static_adapters:
+            ap.error("--adapters/--static-adapters require --tenants >= 1 "
+                     "(adapters serve tenant traffic)")
+        tenants = ()
+        adapters = None
+    else:
+        # skewed harmonic mix: tenant i gets weight 1/(i+1), normalized
+        w = [1.0 / (i + 1) for i in range(args.tenants)]
+        tot = sum(w)
+        tenants = tuple(TenantConfig(name=f"tenant{i}", weight=wi / tot)
+                        for i, wi in enumerate(w))
+        if not args.adapters and not args.static_adapters:
+            for flag, val in (("--adapter-rank", args.adapter_rank),
+                              ("--adapter-publish-iters",
+                               args.adapter_publish_iters),
+                              ("--adapter-policy", args.adapter_policy)):
+                if val is not None:
+                    ap.error(f"{flag} requires --adapters (tenants "
+                             "without adapters serve the base model)")
+            adapters = None
+        else:
+            adapters = AdapterServingConfig(
+                rank=args.adapter_rank
+                if args.adapter_rank is not None else 16,
+                publish_every_iters=args.adapter_publish_iters
+                if args.adapter_publish_iters is not None else 1.0,
+                continuous=not args.static_adapters,
+                policy=args.adapter_policy or "affinity_packed")
     return ExperimentSpec(
         name=f"{args.scenario}_{mode}_{args.policy}",
         inf_model=args.inf, ft_model=args.ft,
         scenario=args.scenario, duration_s=args.duration,
         mean_rps=args.rps, n_sessions=n_sessions, seed=args.seed,
+        tenants=tenants,
         sim=SimConfig(mode="harli", qos_s=args.qos_ms / 1e3,
                       seed=args.seed + 2),
         cluster=ClusterConfig(
@@ -170,6 +216,7 @@ def build_spec(args, ap) -> ExperimentSpec:
             failures=failures,
             migration=migration,
             degradation=degradation,
+            adapters=adapters,
             router=RouterConfig(policy=args.policy,
                                 ttft_slo_s=args.ttft_slo,
                                 tpot_slo_s=args.qos_ms / 1e3),
@@ -269,6 +316,28 @@ def main():
     ap.add_argument("--shed-max-retries", type=int, default=None,
                     help="shed retries before hard rejection "
                          "(requires --ladder)")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="split the trace across N tenants (skewed "
+                         "harmonic weights) with per-tenant attainment "
+                         "reporting; 0 or unset = single-tenant")
+    ap.add_argument("--adapters", action="store_true",
+                    help="serve a per-tenant LoRA adapter, continuously "
+                         "republished from the colocated finetune jobs "
+                         "(requires --tenants >= 1)")
+    ap.add_argument("--static-adapters", action="store_true",
+                    help="adapter serving with publication frozen at v1 "
+                         "(the static-deployment baseline; implies "
+                         "--adapters)")
+    ap.add_argument("--adapter-rank", type=int, default=None,
+                    help="LoRA rank of published adapters (default 16; "
+                         "requires --adapters)")
+    ap.add_argument("--adapter-publish-iters", type=float, default=None,
+                    help="finetune iterations per adapter version "
+                         "(default 1; requires --adapters)")
+    ap.add_argument("--adapter-policy", default=None,
+                    choices=available_policies("adapter_placement"),
+                    help="adapter placement policy (default "
+                         "affinity_packed; requires --adapters)")
     ap.add_argument("--no-autoscale", action="store_true")
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args()
@@ -286,10 +355,15 @@ def main():
                                           "migration_policy",
                                           "shed_viol_frac",
                                           "shed_backoff_base",
-                                          "shed_max_retries"]
+                                          "shed_max_retries",
+                                          "tenants",
+                                          "adapter_rank",
+                                          "adapter_publish_iters",
+                                          "adapter_policy"]
                     if getattr(args, n) is not None]
         explicit += [f"--{n.replace('_', '-')}" for n in
-                     ("fuse_quantum", "no_autoscale", "ladder")
+                     ("fuse_quantum", "no_autoscale", "ladder",
+                      "adapters", "static_adapters")
                      if getattr(args, n)]
         if explicit:
             ap.error(f"--spec runs the file as-is; drop "
@@ -323,6 +397,11 @@ def main():
                  f"({cl.migration.policy})"
     if cl.degradation is not None:
         churn += "  ladder=on"
+    if spec.tenants:
+        churn += f"  tenants={len(spec.tenants)}"
+        if cl.adapters is not None:
+            mode_s = "continuous" if cl.adapters.continuous else "static"
+            churn += f"  adapters={mode_s}({cl.adapters.policy})"
     probe = spec.requests()
     print(f"spec={spec.name}  scenario={spec.scenario}: {len(probe)} "
           f"requests over {spec.duration_s:.0f}s "
@@ -379,6 +458,24 @@ def main():
             tot = res.prefix_hits + res.prefix_misses
             print(f"{'':9s} prefix-cache: {res.prefix_hits}/{tot} hits, "
                   f"{res.prefix_hit_tokens} prefill tokens saved")
+        if cl.adapters is not None:
+            print(f"{'':9s} adapters: {res.adapter_loads} hot-loads "
+                  f"({res.adapter_evictions} evicted, "
+                  f"{res.adapter_load_failures} fell back to base), "
+                  f"{res.adapter_load_time_s:.2f}s total swap time, "
+                  f"versions {res.adapter_versions_published} published "
+                  f"/ {res.adapter_versions_served} served")
+        if spec.tenants and s.tenants:
+            for tid in sorted(s.tenants):
+                tn = s.tenants[tid]
+                name = spec.tenants[tid].name \
+                    if tid < len(spec.tenants) else f"tenant{tid}"
+                print(f"{'':9s} [{name:>8s}] offered={tn.offered:4d} "
+                      f"attained={tn.attained:4d} "
+                      f"TTFT-att={tn.ttft_attainment*100:5.1f}% "
+                      f"TPOT-att={tn.tpot_attainment*100:5.1f}% "
+                      f"TTFT-p99={tn.ttft_p99:5.2f}s "
+                      f"versions={tn.versions_served}")
         print(f"{'':9s} ft_throughput={res.ft_throughput:6.2f} "
               f"(iters/s x batch)  fleet={res.final_fleet} final / "
               f"{res.peak_fleet} peak  scale-actions={len(acts)} "

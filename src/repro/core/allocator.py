@@ -11,7 +11,10 @@ inference model's weights). Three typed sub-pools share it:
                      for sub-2MB activations (§4.5);
   * prefix cache    — whole chunks lent to the session prefix cache
                      (core/prefix_cache.py) so sticky-session KV reuse is
-                     charged against the same reusable pool as the window.
+                     charged against the same reusable pool as the window;
+  * adapter pool    — whole chunks holding hot-loaded LoRA adapter weights
+                     (core/adapters.py): multi-tenant serving competes for
+                     the same HBM as KV admission and the finetune window.
 
 Mechanism difference vs the paper (recorded in DESIGN.md §2): CUDA VMM
 remapping is replaced by budget re-partitioning at decode-round boundaries
@@ -54,8 +57,13 @@ class UnifiedAllocator:
         self.kv_chunks = 0
         self.window_chunks = 0
         self.prefix_chunks = 0         # session prefix cache (prefix_cache.py)
+        self.adapter_chunks = 0        # resident LoRA adapters (adapters.py)
         self.kv_tokens = 0
         self.reclaims = 0              # window chunks reclaimed by KV pressure
+        # paired-accounting audit for adapter churn: every chunk reserved
+        # must eventually be released; adapter_leak exposes the difference
+        self.adapter_reserved_total = 0
+        self.adapter_released_total = 0
         self.small = BuddyAllocator(cfg.small_pool_bytes)
         # metrics timeline for Fig. 13
         self.timeline: List[Dict] = []
@@ -68,7 +76,7 @@ class UnifiedAllocator:
     @property
     def free_chunks(self) -> int:
         return self.total_chunks - self.kv_chunks - self.window_chunks \
-            - self.prefix_chunks
+            - self.prefix_chunks - self.adapter_chunks
 
     @property
     def reserved_chunks(self) -> int:
@@ -122,6 +130,40 @@ class UnifiedAllocator:
         self.prefix_chunks += granted
         return granted
 
+    # -------------------------------------------------------- adapters ----
+    def adapter_reserve(self, chunks: int) -> bool:
+        """Pin a LoRA adapter's weight chunks. Adapters serve inference, so
+        like KV growth they may reclaim finetune-window chunks on the spot —
+        but the grant is all-or-nothing (partial adapter weights are useless)
+        and never eats the §4.4 reserved headroom. Returns False when the
+        adapter genuinely does not fit (caller evicts a colder adapter and
+        retries, or serves at the base model)."""
+        if chunks <= 0:
+            return True
+        avail = max(self.free_chunks - self.reserved_chunks, 0) \
+            + self.window_chunks
+        if chunks > avail:
+            return False
+        short = chunks - max(self.free_chunks - self.reserved_chunks, 0)
+        if short > 0:
+            self.window_chunks -= short
+            self.reclaims += short
+        self.adapter_chunks += chunks
+        self.adapter_reserved_total += chunks
+        return True
+
+    def adapter_release(self, chunks: int) -> None:
+        assert 0 <= chunks <= self.adapter_chunks
+        self.adapter_chunks -= chunks
+        self.adapter_released_total += chunks
+
+    @property
+    def adapter_leak(self) -> int:
+        """Reserve/release pairing audit: nonzero means an adapter load or
+        eviction lost track of chunks. Asserted zero by check_invariants."""
+        return self.adapter_reserved_total - self.adapter_released_total \
+            - self.adapter_chunks
+
     # --------------------------------------------------------- window ----
     def window_capacity_chunks(self) -> int:
         """How many chunks the finetune window may hold right now: free
@@ -150,6 +192,7 @@ class UnifiedAllocator:
             "kv_bytes": self.kv_chunks * self.chunk_bytes,
             "window_bytes": self.window_chunks * self.chunk_bytes,
             "prefix_bytes": self.prefix_chunks * self.chunk_bytes,
+            "adapter_bytes": self.adapter_chunks * self.chunk_bytes,
             "small_bytes": self.cfg.small_pool_bytes,
             "free_bytes": self.free_chunks * self.chunk_bytes,
             "kv_tokens": self.kv_tokens,
@@ -162,7 +205,9 @@ class UnifiedAllocator:
         assert 0 <= self.kv_chunks
         assert 0 <= self.window_chunks
         assert 0 <= self.prefix_chunks
+        assert 0 <= self.adapter_chunks
+        assert self.adapter_leak == 0
         assert self.kv_chunks + self.window_chunks + self.prefix_chunks \
-            <= self.total_chunks
+            + self.adapter_chunks <= self.total_chunks
         assert self.kv_tokens <= self.kv_capacity_tokens() or \
             self.kv_chunks == 0

@@ -38,6 +38,11 @@ Three policy kinds:
     autoscaler's control loops (decode fleet, pooled prefill tier,
     chunked budget). The ``Autoscaler`` keeps cooldown bookkeeping and
     the decision log; policies only decide.
+  * ``adapter_placement`` — ``AdapterPlacement``: which decode instance
+    serves an adapter-carrying request (multi-LoRA serving,
+    core/adapters.py). Consulted by the router *instead of* the routing
+    policy when the request carries an ``adapter_id`` and adapter
+    serving is enabled.
 
 ``ExperimentSpec`` (core/experiment.py) is re-exported here lazily so
 ``from repro.core.api import ExperimentSpec`` works without an import
@@ -54,12 +59,21 @@ from typing import Dict, List, Optional, Tuple, Type
 PENDING = -2     # admitted; still in the prefill stage
 REJECTED = -1
 
-KINDS = ("routing", "prefill", "scaling", "migration")
+KINDS = ("routing", "prefill", "scaling", "migration", "adapter_placement")
+
+
+def _check_kind(kind: str) -> None:
+    """Unknown *kinds* are a programming error distinct from unknown
+    names; fail loudly with the kind list (never another kind's names)."""
+    if kind not in KINDS:
+        raise ValueError(
+            f"unknown policy kind {kind!r}; valid kinds: {', '.join(KINDS)}")
 
 
 class PolicyNotFoundError(KeyError):
-    """Unknown policy name. The message lists what IS registered so a
-    typo'd spec/CLI run fails with the fix in the error text."""
+    """Unknown policy name. The message lists what IS registered *for the
+    requested kind only* so a typo'd spec/CLI run fails with the fix in
+    the error text (suggestions from other kinds would be noise)."""
 
     def __init__(self, kind: str, name: str, available: Tuple[str, ...]):
         self.kind = kind
@@ -80,7 +94,7 @@ class PolicyRegistry:
         self._by_kind: Dict[str, Dict[str, type]] = {k: {} for k in KINDS}
 
     def register(self, kind: str, name: str, cls: type) -> None:
-        assert kind in KINDS, f"unknown policy kind {kind!r} (use {KINDS})"
+        _check_kind(kind)
         existing = self._by_kind[kind].get(name)
         if existing is not None and existing is not cls:
             raise ValueError(
@@ -89,14 +103,16 @@ class PolicyRegistry:
         self._by_kind[kind][name] = cls
 
     def resolve(self, kind: str, name: str) -> type:
-        assert kind in KINDS, f"unknown policy kind {kind!r} (use {KINDS})"
+        _check_kind(kind)
         self._ensure_builtins()
         try:
             return self._by_kind[kind][name]
         except KeyError:
+            # suggestion list scoped to the requested kind only
             raise PolicyNotFoundError(kind, name, self.names(kind)) from None
 
     def names(self, kind: str) -> Tuple[str, ...]:
+        _check_kind(kind)
         self._ensure_builtins()
         return tuple(sorted(self._by_kind[kind]))
 
@@ -120,10 +136,12 @@ def _infer_kind(cls: type) -> str:
         return "scaling"
     if issubclass(cls, MigrationPolicy):
         return "migration"
+    if issubclass(cls, AdapterPlacement):
+        return "adapter_placement"
     raise TypeError(
         f"{cls.__qualname__} subclasses none of RoutingPolicy / "
-        f"PrefillPlacement / ScalingPolicy / MigrationPolicy; pass "
-        f"kind= explicitly")
+        f"PrefillPlacement / ScalingPolicy / MigrationPolicy / "
+        f"AdapterPlacement; pass kind= explicitly")
 
 
 def register_policy(name: str, *, kind: Optional[str] = None):
@@ -294,6 +312,33 @@ class MigrationPolicy(abc.ABC):
     def pick_dest(self, req, cand: List, router):
         """Choose the destination instance for ``req``'s KV from the
         non-empty candidate list (serving peers, victim excluded)."""
+
+
+# ---------------------------------------------------- adapter placement --
+class AdapterPlacement(abc.ABC):
+    """Adapter-aware decode placement (multi-LoRA serving,
+    core/adapters.py). When ``ClusterConfig.adapters`` is set, the router
+    consults this policy *instead of* the routing policy for every
+    request carrying an ``adapter_id`` — the trade-off it owns is
+    locality (an instance already holding the adapter skips the
+    hot-load/swap) versus load balance. Requests without an adapter, and
+    all requests when adapter serving is off, still go through the
+    ``routing`` policy unchanged.
+
+    Instances expose ``inst.adapters`` (an ``AdapterPool`` or None) for
+    residency queries; like routing policies, placements may read router
+    and fleet state but must not mutate it, and must be deterministic."""
+
+    name: str = ""
+
+    def __init__(self, cfg):
+        self.cfg = cfg               # RouterConfig
+
+    @abc.abstractmethod
+    def pick(self, cand: List, req, router):
+        """Choose one instance from the non-empty candidate list for the
+        adapter-carrying ``req`` (``req.adapter_id >= 0``,
+        ``req.adapter_version`` already stamped from the registry)."""
 
 
 def __getattr__(name: str):

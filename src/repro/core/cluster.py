@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import tempfile
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
@@ -53,6 +54,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import api
+from repro.core.adapters import (AdapterRegistry, AdapterServingConfig,
+                                 InstanceAdapterConfig, adapter_bytes)
+from repro.core.allocator import BLOCK_BYTES
 from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot, ScaleDecision)
 from repro.core.costmodel import CostModel, InstanceSpec
@@ -161,6 +165,10 @@ class ClusterConfig:
     # overload degradation ladder (finetune breaker -> load shedding ->
     # hard rejection); None (default) = no ladder, PR 6 behaviour
     degradation: Optional[DegradationConfig] = None
+    # multi-LoRA adapter serving (core/adapters.py): colocated finetune
+    # jobs publish versioned adapters the fleet hot-loads on demand.
+    # None (default) = off, bit-identical to the adapter-less sim
+    adapters: Optional[AdapterServingConfig] = None
 
     def resolved_mode(self) -> str:
         mode = self.prefill_mode
@@ -214,6 +222,13 @@ class ClusterResult:
     breaker_epochs: int = 0          # epochs at ladder level >= 1
     shed_epochs: int = 0             # epochs at ladder level >= 2
     ladder_peak: int = 0             # highest ladder level reached
+    # multi-LoRA adapter serving (ClusterConfig.adapters)
+    adapter_loads: int = 0           # hot-loads performed fleet-wide
+    adapter_evictions: int = 0       # residency evictions/swaps
+    adapter_load_failures: int = 0   # loads that fell back to base model
+    adapter_load_time_s: float = 0.0  # total DMA seconds charged to rounds
+    adapter_versions_published: int = 0  # registry publish events
+    adapter_versions_served: int = 0  # distinct (tenant, version) completed
 
 
 class ClusterSim:
@@ -239,9 +254,31 @@ class ClusterSim:
         self.mode = cluster.resolved_mode()
         placement_cls = api.resolve_policy("prefill", self.mode)
         self.placement: api.PrefillPlacement = placement_cls.build(self)
+        # ---- multi-LoRA adapter serving (ClusterConfig.adapters) --------
+        acfg = cluster.adapters
+        self.adapter_registry: Optional[AdapterRegistry] = None
+        self._adapter_inst_cfg: Optional[InstanceAdapterConfig] = None
+        self._adapter_ids: List[int] = []
+        adapter_policy = None
+        if acfg is not None:
+            self.adapter_registry = AdapterRegistry()
+            a_bytes = adapter_bytes(cfg_ft, acfg.rank)
+            # chunk geometry matches every serving instance's allocator
+            # (same cfg_inf): ceil the adapter into whole chunks so its
+            # charge competes honestly with KV admission
+            chunk_bytes = cfg_inf.num_layers * 2 * BLOCK_BYTES
+            self._adapter_inst_cfg = InstanceAdapterConfig(
+                chunks=max(math.ceil(a_bytes / chunk_bytes), 1),
+                load_time_s=CostModel(cfg_inf, spec).adapter_load_time(
+                    a_bytes),
+                max_loaded=acfg.max_loaded)
+            adapter_policy = api.resolve_policy(
+                "adapter_placement", acfg.policy)(rcfg)
         self.router = ClusterRouter(
             rcfg, CostModel(cfg_inf, spec, seed=sim.seed + 7),
-            predictor=self.predictor, placement=self.placement)
+            predictor=self.predictor, placement=self.placement,
+            adapter_policy=adapter_policy,
+            adapter_registry=self.adapter_registry)
         self.autoscaler = Autoscaler(cluster.autoscaler)
         self.autoscaler.prefill_ttft_slo_s = rcfg.ttft_slo_s
         self._next_id = 0
@@ -325,6 +362,7 @@ class ClusterSim:
             self.predictor, self.sim.seed + self._next_id,
             serves_inference=serves_inference, t0=t, role=role,
             prefix_cache=self.cluster.prefix_cache, ckpt=ckpt,
+            adapters=self._adapter_inst_cfg,
             **self.placement.spawn_kwargs(self, serves_inference))
         # a joiner during an active breaker epoch inherits the pause
         inst.ft_breaker = self._ladder_level >= 1
@@ -394,6 +432,14 @@ class ClusterSim:
         next_control = cl.autoscaler.interval_s
         failsched = FailureSchedule(cl.failures, duration) \
             if cl.failures is not None else None
+        if self.adapter_registry is not None:
+            # every tenant ships a v1 adapter at t=0 (both the continuous
+            # and the static arm serve adapters from the start; only the
+            # finetune->publish stream below differs)
+            self._adapter_ids = sorted({r.adapter_id for r in reqs
+                                        if r.adapter_id >= 0})
+            for aid in self._adapter_ids:
+                self.adapter_registry.publish(aid, 1, 0.0)
         while t < duration:
             epoch_end = min(t + cl.tick_s, duration)
             qi = self._dispatch_arrivals(pending, qi, epoch_end)
@@ -406,6 +452,9 @@ class ClusterSim:
                 if inst.drained:
                     self.router.retire(inst.inst_id)
             self.placement.retire(self, epoch_end)
+            if self.adapter_registry is not None \
+                    and cl.adapters.continuous:
+                self._publish_tick(epoch_end)
             if failsched is not None:
                 # kills land after the epoch's stepping and BEFORE the
                 # control slot: the autoscaler's decode loop sees the
@@ -441,6 +490,22 @@ class ClusterSim:
         self._retry_heap = []
         self.router.check_conservation()
         return self._result(duration)
+
+    def _publish_tick(self, t: float) -> None:
+        """Continuous deployment: the fleet's finetune iterations train
+        the tenants' adapters round-robin; every ``publish_every_iters``
+        per-tenant iterations a new version lands in the registry (and is
+        served by every dispatch from the next epoch on). Idempotent —
+        ``publish`` ignores non-increasing versions."""
+        if not self._adapter_ids:
+            return
+        total = sum(i.ft.iterations for i in self.router.all_instances()
+                    if i.ft is not None)
+        per_tenant = total / len(self._adapter_ids)
+        ver = 1 + int(per_tenant
+                      / self.cluster.adapters.publish_every_iters)
+        for aid in self._adapter_ids:
+            self.adapter_registry.publish(aid, ver, t)
 
     def _dispatch_arrivals(self, pending: List[Request], qi: int,
                            epoch_end: float) -> int:
@@ -764,6 +829,16 @@ class ClusterSim:
                 res.prefix_hits += inst.prefix_cache.stats.hits
                 res.prefix_misses += inst.prefix_cache.stats.misses
                 res.prefix_hit_tokens += inst.prefix_cache.stats.hit_tokens
+            if inst.adapters is not None:
+                res.adapter_loads += inst.adapters.loads
+                res.adapter_evictions += inst.adapters.evictions
+                res.adapter_load_failures += inst.adapters.load_failures
+                res.adapter_load_time_s += inst.adapters.load_time_total_s
+        if self.adapter_registry is not None:
+            res.adapter_versions_published = \
+                self.adapter_registry.versions_published
+            res.adapter_versions_served = sum(
+                tn.versions_served for tn in res.stats.tenants.values())
         return res
 
 

@@ -126,6 +126,16 @@ class CostModel:
         ckpt_bytes = trainable * (2.0 + 8.0)
         return ckpt_bytes / self.inst.host_dma_bw
 
+    def adapter_load_time(self, adapter_bytes: float,
+                          setup_s: float = 0.001) -> float:
+        """Host->HBM hot-load of one LoRA adapter's weights (multi-tenant
+        serving, core/adapters.py): the bf16 adapter tensors stream over
+        the host DMA link after a fixed dispatch/registration handshake.
+        Deterministic (no ``_noise()``) for the same reason as
+        ``kv_migration_time``: loads land on the seeded dispatch path and
+        an RNG draw here would shift every downstream stream."""
+        return setup_s + adapter_bytes / self.inst.host_dma_bw
+
     def kv_migration_time(self, context_tokens: int, bw_bytes_per_s: float,
                           setup_s: float = 0.0) -> float:
         """Live KV transfer of one request to a peer instance over the

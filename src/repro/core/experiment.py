@@ -12,7 +12,10 @@ composes all of it, with:
     of contradictory mode/knob combinations, with the fix in the message;
   * ``to_json`` / ``from_json`` — loss-free round trip, so an experiment
     is a reviewable artifact (``examples/specs/*.json``) and
-    ``cluster_sim.py --spec file.json`` reruns it exactly;
+    ``cluster_sim.py --spec file.json`` reruns it exactly; documents are
+    versioned (``schema_version``, see ``SCHEMA_VERSION``) — v1 specs
+    upgrade automatically through ``upgrade_v1``, unknown versions fail
+    loudly listing the supported ones;
   * ``run()``        — the single entry point: generate the trace
     (seeded ``seed + 1``, the convention every example already used) and
     run the cluster simulation;
@@ -35,6 +38,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from repro.configs import get_config
 from repro.core import api
+from repro.core.adapters import TenantConfig
 from repro.core.cluster import (ClusterConfig, ClusterResult,
                                 DegradationConfig, simulate_cluster)
 from repro.core.prefill_pool import PrefillPoolConfig
@@ -44,6 +48,12 @@ from repro.serving.trace import SCENARIOS, TraceConfig, generate, \
     generate_scenario
 
 SIM_MODES = ("harli", "static", "separate")
+# JSON schema versioning: v1 is the PR-5 schema (no multi-LoRA blocks);
+# v2 added the top-level ``tenants`` and ``cluster.adapters`` blocks.
+# ``from_dict`` accepts both — v1 documents are upgraded in exactly one
+# place (``upgrade_v1``) — and rejects anything else loudly.
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMA_VERSIONS = (1, 2)
 # per-instance override keys: any SimConfig field except the experiment
 # identity ones (mode is fleet-wide; per-instance seeds derive from it)
 OVERRIDABLE_SIM_FIELDS = tuple(
@@ -85,9 +95,36 @@ def _from_dict(cls, data):
         if dataclasses.is_dataclass(t):
             value = _from_dict(t, value)
         elif origin is tuple and value is not None:
-            value = tuple(value)
+            args = typing.get_args(t)
+            el = args[0] if args else None
+            if el is not None and dataclasses.is_dataclass(el):
+                value = tuple(_from_dict(el, v) for v in value)
+            else:
+                value = tuple(value)
         kwargs[name] = value
     return cls(**kwargs)
+
+
+def upgrade_v1(data: Dict) -> Dict:
+    """THE v1 -> v2 schema upgrade — the single place version migration
+    happens (``from_dict`` routes every v1 document here).
+
+    v2 added the multi-LoRA serving blocks: top-level ``tenants`` and
+    ``cluster.adapters``. A v1 document (``schema_version`` absent or 1)
+    predates both, so the upgrade is: reject documents that smuggle v2
+    blocks without declaring the version, then fill the v2 defaults (no
+    tenants, no adapter serving) — semantics unchanged by construction."""
+    v2_only = [k for k in ("tenants",) if k in data]
+    cl = data.get("cluster")
+    if isinstance(cl, dict) and cl.get("adapters") is not None:
+        v2_only.append("cluster.adapters")
+    if v2_only:
+        raise SpecError(
+            f"v1 spec uses v2-only block(s) {', '.join(v2_only)} — "
+            'declare "schema_version": 2')
+    out = dict(data)
+    out.pop("schema_version", None)
+    return out
 
 
 @dataclasses.dataclass
@@ -100,6 +137,7 @@ class ExperimentSpec:
     (router derives from sim unless explicit). ``trace`` overrides the
     scenario preset entirely when given."""
 
+    schema_version: int = SCHEMA_VERSION
     name: str = "experiment"
     inf_model: str = "llama3-8b"         # serving model config name
     ft_model: str = "llama3-8b"          # finetune model config name
@@ -109,6 +147,10 @@ class ExperimentSpec:
     n_sessions: int = 0                  # sticky sessions in the trace
     seed: int = 0
     trace: Optional[TraceConfig] = None  # full trace override
+    # v2: per-tenant traffic mix + SLO overrides; entry i is adapter_id i.
+    # Tenants alone give per-tenant accounting (base-model serving);
+    # pairing them with cluster.adapters turns on multi-LoRA serving.
+    tenants: Tuple[TenantConfig, ...] = ()
     sim: SimConfig = dataclasses.field(default_factory=SimConfig)
     cluster: ClusterConfig = dataclasses.field(default_factory=ClusterConfig)
 
@@ -258,6 +300,51 @@ class ExperimentSpec:
                         "they only apply when shedding is enabled; drop "
                         "them or set shed: true (CLI: --shed-* flags "
                         "require the ladder with shedding on)")
+        if self.schema_version != SCHEMA_VERSION:
+            raise SpecError(
+                f"schema_version must be {SCHEMA_VERSION} on a parsed "
+                "spec — from_json/from_dict auto-upgrade v1 documents; "
+                "don't set the field by hand")
+        for i, tn in enumerate(self.tenants):
+            if tn.weight <= 0:
+                raise SpecError(f"tenants[{i}].weight must be > 0 "
+                                f"(got {tn.weight})")
+            for fld in ("ttft_slo_s", "tpot_slo_s"):
+                v = getattr(tn, fld)
+                if v is not None and v <= 0:
+                    raise SpecError(
+                        f"tenants[{i}].{fld} must be > 0 or null "
+                        "(null inherits the fleet SLO)")
+        if self.tenants and self.trace is not None \
+                and tuple(self.trace.tenant_weights) \
+                != tuple(t.weight for t in self.tenants):
+            raise SpecError(
+                "tenants block disagrees with trace.tenant_weights="
+                f"{self.trace.tenant_weights} — with a full trace "
+                "override, trace.tenant_weights must mirror the tenant "
+                "weights (the trace is what actually runs)")
+        if cl.adapters is not None:
+            a = cl.adapters
+            if not self.tenants and not (
+                    self.trace is not None and self.trace.tenant_weights):
+                raise SpecError(
+                    "cluster.adapters configured but no tenant traffic — "
+                    "no request would ever carry an adapter_id; add a "
+                    "tenants block (or trace.tenant_weights) or drop "
+                    "adapters (adapters: null)")
+            if a.rank < 1:
+                raise SpecError("cluster.adapters.rank must be >= 1")
+            if a.publish_every_iters <= 0:
+                raise SpecError(
+                    "cluster.adapters.publish_every_iters must be > 0 — "
+                    "it is the finetune-iterations-per-version cadence")
+            if a.max_loaded < 0:
+                raise SpecError("cluster.adapters.max_loaded must be >= 0 "
+                                "(0 = bounded only by allocator capacity)")
+            try:
+                api.resolve_policy("adapter_placement", a.policy)
+            except api.PolicyNotFoundError as e:
+                raise SpecError(str(e)) from None
         for i, ov in enumerate(cl.instance_overrides):
             if not isinstance(ov, dict):
                 raise SpecError(f"instance_overrides[{i}] must be an "
@@ -289,6 +376,16 @@ class ExperimentSpec:
 
     @classmethod
     def from_dict(cls, data: Dict) -> "ExperimentSpec":
+        if not isinstance(data, dict):
+            raise SpecError("ExperimentSpec must be an object, "
+                            f"got {type(data).__name__}")
+        version = data.get("schema_version", 1)
+        if version not in SUPPORTED_SCHEMA_VERSIONS:
+            raise SpecError(
+                f"unsupported schema_version {version!r}; supported "
+                "versions: 1 (auto-upgraded), 2 (current)")
+        if version == 1:
+            data = upgrade_v1(data)
         return _from_dict(cls, data)
 
     @classmethod
@@ -316,12 +413,24 @@ class ExperimentSpec:
             self, sim=dataclasses.replace(self.sim, mode=sim_mode))
 
     def requests(self) -> List[Request]:
-        """The (seeded, deterministic) trace this spec describes."""
+        """The (seeded, deterministic) trace this spec describes.
+        When tenants are declared, their weights drive the per-request
+        adapter_id draw and their SLO overrides are stamped onto each
+        request (null inherits the fleet-wide router SLO)."""
         if self.trace is not None:
-            return generate(self.trace)
-        return generate_scenario(self.scenario, self.duration_s,
-                                 self.mean_rps, seed=self.seed + 1,
-                                 n_sessions=self.n_sessions)
+            reqs = generate(self.trace)
+        else:
+            reqs = generate_scenario(
+                self.scenario, self.duration_s, self.mean_rps,
+                seed=self.seed + 1, n_sessions=self.n_sessions,
+                tenant_weights=tuple(t.weight for t in self.tenants))
+        if self.tenants:
+            for r in reqs:
+                if 0 <= r.adapter_id < len(self.tenants):
+                    tn = self.tenants[r.adapter_id]
+                    r.ttft_slo_s = tn.ttft_slo_s
+                    r.tpot_slo_s = tn.tpot_slo_s
+        return reqs
 
     def run(self, duration: Optional[float] = None) -> ClusterResult:
         """Validate, generate the trace, run the cluster experiment.

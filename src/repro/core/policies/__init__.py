@@ -12,12 +12,15 @@ Importing this package registers every built-in policy:
                  loops (core/policies/scaling.py)
   * migration  — kv_headroom / least_loaded live-KV-migration destination
                  choices (core/policies/migration.py)
+  * adapter_placement — affinity_packed / replicate_hot multi-LoRA
+                 serving placements (core/policies/adapter_placement.py)
 
 The registry imports this package lazily on first resolve, so user code
 never needs to import it explicitly; third-party policies just call
 ``repro.core.api.register_policy`` from their own module.
 """
 
+from repro.core.policies import adapter_placement  # noqa: F401
 from repro.core.policies import cache_aware  # noqa: F401
 from repro.core.policies import migration  # noqa: F401
 from repro.core.policies import placement  # noqa: F401

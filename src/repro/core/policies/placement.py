@@ -42,7 +42,7 @@ class ChainedPlacement(PrefillPlacement):
         # the shortened effective_prompt_len prices the tail re-prefill
         inst = router.claim_forced(req)
         if inst is None:
-            inst = router.policy.pick(cand, req, router)
+            inst = router.pick_decode(cand, req)
             router.credit_prefix(inst, req)
         t_start = max(self._free.get(inst.inst_id, now), req.arrival, now)
         ready = t_start + router.prefill_cm.prefill_latency(
@@ -178,7 +178,7 @@ class ChunkedPlacement(PrefillPlacement):
         # backpressure keeps working
         inst = router.claim_forced(req)
         if inst is None:
-            inst = router.policy.pick(cand, req, router)
+            inst = router.pick_decode(cand, req)
             router.credit_prefix(inst, req)
         inst.enqueue_chunked(req, now)
         return inst.inst_id

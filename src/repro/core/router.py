@@ -57,11 +57,13 @@ instance — never dropped, never duplicated.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core import api
+from repro.core.adapters import AdapterRegistry
 from repro.core.api import PENDING, REJECTED  # noqa: F401  (legacy home)
 from repro.core.costmodel import CostModel
 from repro.core.predictor import TwoStageLatencyPredictor
@@ -69,12 +71,27 @@ from repro.core.prefill_pool import PrefillPool
 from repro.core.simulator import DecodeInstanceSim
 from repro.serving.request import Request
 
-# Legacy tuples of the built-in names, kept importable for back
-# compatibility; the registry (api.available_policies) is authoritative
-# and additionally lists plugins such as ``cache_aware``.
-POLICIES = ("least_loaded", "round_robin", "random",
-            "predicted_latency", "session_affinity")
-PREFILL_MODES = ("chained", "pooled", "chunked")
+# Deprecated legacy tuples of the built-in names (PR-5 shims). Importing
+# ``POLICIES`` / ``PREFILL_MODES`` warns via the module __getattr__ below:
+# the registry (api.available_policies) is authoritative and additionally
+# lists plugins such as ``cache_aware``. Slated for removal at the next
+# re-anchor.
+_LEGACY_POLICIES = ("least_loaded", "round_robin", "random",
+                    "predicted_latency", "session_affinity")
+_LEGACY_PREFILL_MODES = ("chained", "pooled", "chunked")
+
+
+def __getattr__(name: str):
+    if name in ("POLICIES", "PREFILL_MODES"):
+        warnings.warn(
+            f"repro.core.router.{name} is deprecated; use "
+            f"repro.core.api.available_policies("
+            f"{'routing' if name == 'POLICIES' else 'prefill'!r}) — "
+            f"the tuple is slated for removal at the next re-anchor",
+            DeprecationWarning, stacklevel=2)
+        return _LEGACY_POLICIES if name == "POLICIES" \
+            else _LEGACY_PREFILL_MODES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -102,6 +119,24 @@ class RoutedRequest:
     rid: int
     instance: int                    # -1 rejected, -2 in prefill stage
     arrival: float
+    adapter_id: int = -1             # tenant adapter (-1 = base model)
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant slice of the goodput accounting (multi-LoRA serving):
+    DistServe-style attainment evaluated against the tenant's own SLOs
+    (Request.ttft_slo_s/tpot_slo_s overrides, else the router-wide
+    targets). Keyed by adapter_id in ClusterStats.tenants."""
+    offered: int = 0
+    completed: int = 0
+    attained: int = 0
+    ttft_attainment: float = 0.0
+    tpot_attainment: float = 0.0
+    goodput: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p99: float = 0.0
+    versions_served: int = 0         # distinct adapter versions completed
 
 
 @dataclasses.dataclass
@@ -130,19 +165,26 @@ class ClusterStats:
     # requests hard-rejected after exhausting their shed-backoff retries.
     # Counted inside ``rejected`` too — this field attributes the share
     shed_rejected: int = 0
+    # per-tenant attainment (multi-LoRA serving, core/adapters.py);
+    # empty unless the trace carries adapter ids
+    tenants: Dict[int, TenantStats] = dataclasses.field(default_factory=dict)
 
 
 def request_slo(r: Request, cfg: RouterConfig):
     """Per-request SLO verdict: (ttft_ok, tpot_ok, ttft, tpot_percentile).
     THE attainment definition — ClusterRouter.stats and every figure that
     plots goodput over time must agree on it, so it lives in one place.
-    Only meaningful for completed requests (finish >= 0, tokens emitted)."""
+    Only meaningful for completed requests (finish >= 0, tokens emitted).
+    Per-tenant SLO overrides on the request take precedence over the
+    router-wide targets (the slack multiplier applies either way)."""
     ttft = r.token_times[0] - r.arrival
     samples = r.tpot_samples()
     tpot_p = float(np.percentile(samples, cfg.tpot_quantile * 100)) \
         if samples else 0.0
-    ttft_ok = ttft <= cfg.ttft_slo_s
-    tpot_ok = tpot_p <= cfg.tpot_slo_s * cfg.tpot_slack
+    ttft_slo = cfg.ttft_slo_s if r.ttft_slo_s is None else r.ttft_slo_s
+    tpot_slo = cfg.tpot_slo_s if r.tpot_slo_s is None else r.tpot_slo_s
+    ttft_ok = ttft <= ttft_slo
+    tpot_ok = tpot_p <= tpot_slo * cfg.tpot_slack
     return ttft_ok, tpot_ok, ttft, tpot_p
 
 
@@ -162,7 +204,9 @@ class ClusterRouter:
                  prefill_pool: Optional[PrefillPool] = None,
                  predictor: Optional[TwoStageLatencyPredictor] = None,
                  mode: Optional[str] = None,
-                 placement: Optional[api.PrefillPlacement] = None):
+                 placement: Optional[api.PrefillPlacement] = None,
+                 adapter_policy: Optional[api.AdapterPlacement] = None,
+                 adapter_registry: Optional[AdapterRegistry] = None):
         self.cfg = cfg
         self.prefill_cm = prefill_cm
         self.predictor = predictor
@@ -170,7 +214,16 @@ class ClusterRouter:
             api.resolve_policy("routing", cfg.policy)(cfg)
         if placement is None:
             # deprecation shim: derive the placement from the legacy
-            # (prefill_pool, mode) keywords exactly as before
+            # (prefill_pool, mode) keywords exactly as before — slated
+            # for removal at the next re-anchor
+            if prefill_pool is not None or mode is not None:
+                warnings.warn(
+                    "ClusterRouter(prefill_pool=/mode=) is deprecated; "
+                    "construct a PrefillPlacement via "
+                    "api.resolve_policy('prefill', ...) and pass "
+                    "placement=, or drive the run from an ExperimentSpec "
+                    "— the legacy keywords are slated for removal at the "
+                    "next re-anchor", DeprecationWarning, stacklevel=2)
             if mode is None:
                 mode = "pooled" if prefill_pool is not None else "chained"
             assert (mode == "pooled") == (prefill_pool is not None), \
@@ -182,6 +235,11 @@ class ClusterRouter:
                 "pass either a placement object or the legacy keywords"
         self.placement = placement
         self.mode = placement.name
+        # multi-LoRA serving (core/adapters.py): when set, adapter-carrying
+        # requests are placed by the adapter_placement policy and stamped
+        # with the registry's newest published version at dispatch
+        self.adapter_policy = adapter_policy
+        self.adapter_registry = adapter_registry
         self.instances: Dict[int, DecodeInstanceSim] = {}
         self.retired: Dict[int, DecodeInstanceSim] = {}
         self.routed: List[RoutedRequest] = []
@@ -355,6 +413,12 @@ class ClusterRouter:
         entered a prefill stage, or REJECTED (-1) under global
         saturation. Exactly-once by construction."""
         assert req.rid not in self._assigned, "request routed twice"
+        if self.adapter_registry is not None and req.adapter_id >= 0:
+            # continuous deployment: serve whatever version the finetune
+            # side has published by now (static baselines only ever see
+            # the version published at t=0)
+            req.adapter_version = self.adapter_registry.latest(
+                req.adapter_id)
         # admission rejects only under GLOBAL saturation: an instance past
         # reject_load is skipped as long as any other can still absorb;
         # the placement may add its own tier's backpressure on top
@@ -370,9 +434,20 @@ class ClusterRouter:
         return target
 
     def _record(self, req: Request, instance: int) -> None:
-        rr = RoutedRequest(req.rid, instance, req.arrival)
+        rr = RoutedRequest(req.rid, instance, req.arrival, req.adapter_id)
         self.routed.append(rr)
         self._routed_ix[req.rid] = rr
+
+    def pick_decode(self, cand: List[DecodeInstanceSim],
+                    req: Request) -> DecodeInstanceSim:
+        """Decode-instance choice: the adapter placement policy for
+        adapter-carrying requests when multi-LoRA serving is on, else the
+        routing policy. Placements call this instead of ``policy.pick``
+        so adapter awareness needs no per-mode branches."""
+        if self.adapter_policy is not None and req is not None \
+                and req.adapter_id >= 0:
+            return self.adapter_policy.pick(cand, req, self)
+        return self.policy.pick(cand, req, self)
 
     def pump_prefill(self, until: float) -> int:
         """Advance the prefill stage to ``until`` and hand every completed
@@ -418,7 +493,7 @@ class ClusterRouter:
                     granter.prefix_cache.revoke(req.cache_hit_tokens)
                 req.cache_hit_tokens = 0
         if inst is None:
-            inst = self.policy.pick(cand, req, self)
+            inst = self.pick_decode(cand, req)
         inst.enqueue(req, ready)
         self._assigned[req.rid] = inst.inst_id
         self._routed_ix[req.rid].instance = inst.inst_id
@@ -495,7 +570,15 @@ class ClusterRouter:
         for inst in self.all_instances():
             for r in inst.all_reqs:
                 reqs[r.rid] = r
+        # per-tenant accumulators (adapter-carrying traffic only)
+        tn_ttfts: Dict[int, List[float]] = {}
+        tn_tpots: Dict[int, List[float]] = {}
+        tn_vers: Dict[int, Set[int]] = {}
         for rr in self.routed:
+            tn = None
+            if rr.adapter_id >= 0:
+                tn = st.tenants.setdefault(rr.adapter_id, TenantStats())
+                tn.offered += 1
             if rr.instance == REJECTED:
                 st.rejected += 1
                 continue
@@ -507,6 +590,15 @@ class ClusterRouter:
             ttft_ok, tpot_ok, ttft, tpot_p = request_slo(r, cfg)
             ttfts.append(ttft)
             tpots.append(tpot_p)
+            if tn is not None:
+                tn.completed += 1
+                tn.ttft_attainment += ttft_ok
+                tn.tpot_attainment += tpot_ok
+                tn.attained += ttft_ok and tpot_ok
+                tn_ttfts.setdefault(rr.adapter_id, []).append(ttft)
+                tn_tpots.setdefault(rr.adapter_id, []).append(tpot_p)
+                tn_vers.setdefault(rr.adapter_id, set()).add(
+                    r.adapter_version)
             if r.prefill_start >= 0 and r.restarts == 0:
                 # went through the pool; restarted requests are excluded —
                 # their re-prefill timestamps postdate the first token, so
@@ -534,6 +626,16 @@ class ClusterRouter:
             st.ttft_queue_p99 = float(np.percentile(stage_q, 99))
             st.ttft_prefill_p99 = float(np.percentile(stage_p, 99))
             st.ttft_decode_wait_p99 = float(np.percentile(stage_d, 99))
+        for aid, tn in st.tenants.items():
+            if tn.completed:
+                tn.ttft_attainment /= tn.completed
+                tn.tpot_attainment /= tn.completed
+            if duration > 0:
+                tn.goodput = tn.attained / duration
+            if tn_ttfts.get(aid):
+                tn.ttft_p99 = float(np.percentile(tn_ttfts[aid], 99))
+                tn.tpot_p99 = float(np.percentile(tn_tpots[aid], 99))
+            tn.versions_served = len(tn_vers.get(aid, ()))
         return st
 
     def check_conservation(self) -> None:

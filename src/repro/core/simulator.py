@@ -18,10 +18,11 @@ import dataclasses
 import heapq
 import math
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core.adapters import AdapterPool, InstanceAdapterConfig
 from repro.core.allocator import AllocatorConfig, UnifiedAllocator
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.predictor import TwoStageLatencyPredictor
@@ -301,7 +302,8 @@ class DecodeInstanceSim:
                  role: Optional[str] = None, *,
                  chunked: Optional[ChunkedPrefillConfig] = None,
                  prefix_cache: Optional[PrefixCacheConfig] = None,
-                 ckpt: Optional[FinetuneCheckpointer] = None):
+                 ckpt: Optional[FinetuneCheckpointer] = None,
+                 adapters: Optional[InstanceAdapterConfig] = None):
         self.inst_id = inst_id
         self.sim = sim
         self.cfg_inf = cfg_inf
@@ -391,6 +393,14 @@ class DecodeInstanceSim:
             self.prefix_cache = PrefixCache(prefix_cache, self.alloc)
             self.kv_budget_chunks = max(
                 self.kv_budget_chunks - self.prefix_cache.granted_chunks, 1)
+        # ---- multi-LoRA adapter serving (core/adapters.py) --------------
+        # resident adapter chunks are charged dynamically: _can_admit and
+        # kv_headroom_chunks subtract alloc.adapter_chunks, so hot-loads
+        # genuinely compete with KV admission instead of pre-carving a
+        # static budget slice
+        self.adapters: Optional[AdapterPool] = None
+        if adapters is not None and serves_inference:
+            self.adapters = AdapterPool(self.alloc, adapters)
 
     # -- external event-loop API ------------------------------------------
     def set_role(self, role: str) -> None:
@@ -404,6 +414,8 @@ class DecodeInstanceSim:
         prefill completes at ``ready_time``."""
         heapq.heappush(self._pending, (ready_time, req.rid, req))
         self.all_reqs.append(req)
+        if self.adapters is not None:
+            self.adapters.require(req.adapter_id, req.adapter_version)
 
     def enqueue_chunked(self, req: Request, now: float) -> None:
         """Hand a request whose prefill this instance will run in chunks
@@ -413,6 +425,8 @@ class DecodeInstanceSim:
         heapq.heappush(self._chunk_pending,
                        (max(req.arrival, now), req.rid, req))
         self.all_reqs.append(req)
+        if self.adapters is not None:
+            self.adapters.require(req.adapter_id, req.adapter_version)
 
     def recall(self, rid: int) -> Optional[Request]:
         """Pull a not-yet-admitted request back out of the ready queue (its
@@ -454,7 +468,7 @@ class DecodeInstanceSim:
                    for _, _, req in self._pending)
         tok += sum(req.prompt_len + req.max_new_tokens
                    for _, _, req in self._chunk_pending)
-        return self.kv_budget_chunks \
+        return self.kv_budget_chunks - self.alloc.adapter_chunks \
             - math.ceil(tok / self.alloc.tokens_per_chunk)
 
     def begin_preempt(self, deadline: float) -> None:
@@ -497,6 +511,8 @@ class DecodeInstanceSim:
             self.ft.cursor = restored % self.ft.units_per_iter
         if self.prefix_cache is not None:
             self.prefix_cache.invalidate_all()
+        if self.adapters is not None:
+            self.adapters.evict_all()
         return lost, ft_lost_iters
 
     @property
@@ -521,7 +537,9 @@ class DecodeInstanceSim:
         tok = cand.prompt_len + cand.max_new_tokens
         tok += sum(r.prompt_len + r.max_new_tokens for r in active)
         need = math.ceil(tok / self.alloc.tokens_per_chunk)
-        return need <= self.kv_budget_chunks
+        # resident LoRA adapters occupy real chunks: admission competes
+        # with them (adapter_chunks is 0 when adapter serving is off)
+        return need <= self.kv_budget_chunks - self.alloc.adapter_chunks
 
     def _pick_k(self, t, bs, ctx) -> int:
         if not self.colocate or self.role == "decode":
@@ -746,6 +764,7 @@ class DecodeInstanceSim:
                 start = self.t
                 lat = self.cm_inf.mixed_round_latency(0, 0.0, tokens,
                                                       chunk_ctx)
+                lat += self._adapter_load_s()
                 self.t += lat
                 self._apply_chunk(takes, start, self.t)
                 self.chunk_timeline.append((start, tokens,
@@ -816,6 +835,13 @@ class DecodeInstanceSim:
                 expected = cm.decode_solo(bs, ctx, noisy=False)
         if sim.straggler_prob and self._rng.random() < sim.straggler_prob:
             lat *= float(self._rng.uniform(3.0, 8.0))   # injected fault
+        # pending adapter hot-loads land in this round: the DMA time is
+        # part of both actual and expected latency (a swap is planned
+        # work, not a straggler signal)
+        load_s = self._adapter_load_s()
+        if load_s > 0.0:
+            lat += load_s
+            expected += load_s
         round_start = self.t
         self.t += lat
         self.rounds += 1
@@ -850,6 +876,22 @@ class DecodeInstanceSim:
         if self._snap_ctr % sim.snapshot_every == 0:
             self.alloc.snapshot(self.t)
         return self.t
+
+    def _adapter_load_s(self) -> float:
+        """Perform queued adapter hot-loads now; seconds to charge to the
+        current round (0.0 when adapter serving is off or nothing queued)."""
+        if self.adapters is None:
+            return 0.0
+        return self.adapters.take_load_time(self._adapters_in_use())
+
+    def _adapters_in_use(self) -> Set[int]:
+        """Adapter ids pinned by in-flight requests — never evicted."""
+        ids = {r.adapter_id for r in self.active if r.adapter_id >= 0}
+        ids |= {req.adapter_id for _, _, req in self._pending
+                if req.adapter_id >= 0}
+        ids |= {req.adapter_id for _, _, req in self._chunk_pending
+                if req.adapter_id >= 0}
+        return ids
 
     def collect_tpot(self) -> None:
         """Fold per-token latencies of every routed request into the result

@@ -47,6 +47,15 @@ class Request:
     # admission-control shed count (degradation ladder): each shed re-entry
     # waits a seeded jittered exponential backoff that lands in TTFT
     retries: int = 0
+    # multi-LoRA serving (core/adapters.py): the tenant adapter this
+    # request must be served with (-1 = base model), and the version the
+    # router stamped from the AdapterRegistry at dispatch
+    adapter_id: int = -1
+    adapter_version: int = 0
+    # per-tenant SLO overrides (None = RouterConfig defaults): request_slo
+    # scores each tenant's requests against its own targets
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property

@@ -41,6 +41,11 @@ class TraceConfig:
     # them never perturbs the arrival/length draws of an existing seed.
     n_sessions: int = 0
     session_zipf_a: float = 1.2      # few hot sessions, long cold tail
+    # multi-tenant adapter traffic (core/adapters.py): per-tenant arrival
+    # weights; empty = single-tenant (every request serves the base model,
+    # adapter_id -1). Tenant draws use their own RNG stream (like session
+    # ids) so enabling tenants never perturbs an existing seed's trace.
+    tenant_weights: Tuple[float, ...] = ()
     seed: int = 0
 
 
@@ -73,6 +78,12 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
         for r in reqs:
             r.session_id = int(srng.zipf(cfg.session_zipf_a)
                                % cfg.n_sessions)
+    if cfg.tenant_weights:
+        trng = np.random.default_rng(cfg.seed + TENANT_SEED_SALT)
+        w = np.asarray(cfg.tenant_weights, dtype=float)
+        p = w / w.sum()
+        for r in reqs:
+            r.adapter_id = int(trng.choice(len(p), p=p))
     return reqs
 
 
@@ -80,6 +91,9 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
 # Own RNG stream salt (like the session stream's 104729): a failure
 # schedule for seed s never perturbs the arrival/length draws of seed s.
 FAILURE_SEED_SALT = 92821
+
+# Tenant-assignment stream salt (same isolation property as above).
+TENANT_SEED_SALT = 74093
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,14 +169,20 @@ class FailureSchedule:
 # tenant class a MaaS fleet must absorb (steady API traffic, a daily cycle,
 # a flash crowd, agentic long-tail jobs, chatbot sessions with shared
 # prompt prefixes).
-SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail", "session_heavy")
+SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail", "session_heavy",
+             "multi_tenant")
+
+# multi_tenant default arrival mix: a few hot tenants, a long-ish tail —
+# the regime adapter_placement policies must pack/replicate for.
+DEFAULT_TENANT_WEIGHTS = (0.4, 0.3, 0.2, 0.1)
 
 
 def scenario_config(name: str, duration_s: float = 600.0,
                     mean_rps: float = 5.3, seed: int = 0,
-                    n_sessions: int = 0) -> TraceConfig:
+                    n_sessions: int = 0,
+                    tenant_weights: Tuple[float, ...] = ()) -> TraceConfig:
     base = dict(duration_s=duration_s, mean_rps=mean_rps, seed=seed,
-                n_sessions=n_sessions)
+                n_sessions=n_sessions, tenant_weights=tenant_weights)
     if name == "steady":
         # near-Poisson arrivals, flat envelope: the autoscaler baseline
         return TraceConfig(burstiness=1.0, rate_amplitude=0.05, **base)
@@ -188,14 +208,24 @@ def scenario_config(name: str, duration_s: float = 600.0,
         base["n_sessions"] = n_sessions if n_sessions > 0 else 12
         return TraceConfig(burstiness=0.8, rate_amplitude=0.1,
                            prompt_sigma=0.35, **base)
+    if name == "multi_tenant":
+        # MaaS adapter tenancy: several tenants' traffic multiplexed over
+        # one fleet, skewed toward a few hot adapters; moderate bursts so
+        # placement (not raw capacity) dominates the outcome
+        if not base["tenant_weights"]:
+            base["tenant_weights"] = DEFAULT_TENANT_WEIGHTS
+        return TraceConfig(burstiness=0.7, rate_amplitude=0.2, **base)
     raise ValueError(f"unknown scenario {name!r}; choose from {SCENARIOS}")
 
 
 def generate_scenario(name: str, duration_s: float = 600.0,
                       mean_rps: float = 5.3, seed: int = 0,
-                      n_sessions: int = 0) -> List[Request]:
+                      n_sessions: int = 0,
+                      tenant_weights: Tuple[float, ...] = ()
+                      ) -> List[Request]:
     return generate(scenario_config(name, duration_s, mean_rps, seed,
-                                    n_sessions=n_sessions))
+                                    n_sessions=n_sessions,
+                                    tenant_weights=tenant_weights))
 
 
 def peak_rps(reqs: List[Request], window_s: float = 10.0) -> float:

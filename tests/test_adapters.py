@@ -1,0 +1,391 @@
+"""Multi-LoRA adapter serving: the finetune->serve loop (PR 9).
+
+Layers under test, bottom-up:
+
+  * ``UnifiedAllocator.adapter_reserve/release`` — adapter weight bytes
+    as a fourth first-class allocator consumer (conservation, leak
+    counter, invariants under churn);
+  * ``AdapterRegistry`` / ``AdapterPool`` — monotone versioned publish,
+    LRU hot-load/evict with in-use protection;
+  * adapters-off bit-identity — ``ClusterConfig.adapters=None`` is
+    pinned bit-identical to the PR 7 build in all three prefill modes
+    (the determinism contract every PR's default-off feature obeys);
+  * the acceptance property — on the multi_tenant scenario, harli
+    continuous deployment serves strictly more adapter versions than the
+    static deploy-once baseline at per-tenant SLO attainment no worse.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.adapters import (AdapterPool, AdapterRegistry,
+                                 AdapterServingConfig,
+                                 InstanceAdapterConfig, TenantConfig,
+                                 adapter_bytes)
+from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+from repro.core.api import ExperimentSpec, SpecError
+from repro.core.cluster import ClusterConfig
+from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.experiment import SCHEMA_VERSION, upgrade_v1
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.simulator import SimConfig
+
+LLAMA = get_config("llama3-8b")
+
+
+# ------------------------------------------------ allocator adapter pool --
+def _alloc():
+    return UnifiedAllocator(AllocatorConfig(
+        total_bytes=16 * 1024 ** 3, n_layers=32,
+        kv_bytes_per_token=128 * 1024, max_bs=64, qos_s=0.040,
+        swap_time_s=0.004, small_pool_bytes=256 * 1024 ** 2))
+
+
+def test_adapter_reserve_is_all_or_nothing_and_charges_free():
+    a = _alloc()
+    free0 = a.free_chunks
+    assert a.adapter_reserve(4)
+    assert a.adapter_chunks == 4 and a.free_chunks == free0 - 4
+    # an impossible ask changes nothing
+    assert not a.adapter_reserve(a.total_chunks * 2)
+    assert a.adapter_chunks == 4 and a.free_chunks == free0 - 4
+    a.adapter_release(4)
+    assert a.adapter_chunks == 0 and a.free_chunks == free0
+    assert a.adapter_leak == 0
+    a.check_invariants()
+
+
+def test_adapter_reserve_reclaims_window_but_never_reserve():
+    a = _alloc()
+    w0 = a.resize_window(8)              # give finetune a real window
+    assert w0 == 8
+    headroom = max(a.free_chunks - a.reserved_chunks, 0)
+    # ask for more than unreserved headroom: the shortfall must come out
+    # of the finetune window, not the reserved QoS headroom
+    ask = headroom + 3
+    assert a.adapter_reserve(ask)
+    assert a.window_chunks == w0 - 3
+    assert a.reclaims >= 3
+    a.check_invariants()
+    # beyond headroom + window is refused outright
+    assert not a.adapter_reserve(a.free_chunks + a.window_chunks + 1)
+    a.adapter_release(ask)
+    assert a.adapter_leak == 0
+
+
+def test_allocator_conservation_under_adapter_churn():
+    """Hot-load/evict storm: every reserve is exactly paired with a
+    release, the leak counter stays zero, and invariants hold at every
+    step — interleaved with KV traffic on the same allocator."""
+    a = _alloc()
+    a.resize_window(4)
+    live_kv_tokens = 0
+    resident = []
+    for step in range(200):
+        if step % 3 == 0 and a.adapter_reserve(2):
+            resident.append(2)
+        if step % 7 == 0 and resident:
+            a.adapter_release(resident.pop())
+        if step % 2 == 0 and a.kv_alloc_tokens(4096):
+            live_kv_tokens += 4096
+        if step % 5 == 0 and live_kv_tokens >= 4096:
+            a.kv_free_tokens(4096)
+            live_kv_tokens -= 4096
+        a.check_invariants()
+    for c in resident:
+        a.adapter_release(c)
+    a.kv_free_tokens(live_kv_tokens)
+    assert a.adapter_chunks == 0
+    assert a.adapter_leak == 0
+    assert a.adapter_reserved_total == a.adapter_released_total
+    a.check_invariants()
+
+
+# ------------------------------------------------------------- registry --
+def test_registry_versions_are_monotone_per_adapter():
+    reg = AdapterRegistry()
+    assert reg.latest(0) == 0            # unpublished -> base (v0)
+    assert reg.publish(0, 1, t=0.0)
+    assert reg.publish(0, 2, t=1.0)
+    assert not reg.publish(0, 2, t=2.0)  # re-publish is a no-op
+    assert not reg.publish(0, 1, t=3.0)  # regression refused
+    assert reg.latest(0) == 2 and reg.latest(1) == 0
+    assert reg.publish(1, 1, t=4.0)
+    assert reg.versions_published == 3
+    assert [(aid, v) for (_, aid, v) in reg.published] == \
+        [(0, 1), (0, 2), (1, 1)]
+
+
+# ----------------------------------------------------------- pool churn --
+def _pool(max_loaded=0, chunks=2):
+    a = _alloc()
+    return a, AdapterPool(a, InstanceAdapterConfig(
+        chunks=chunks, load_time_s=0.01, max_loaded=max_loaded))
+
+
+def test_pool_load_evict_storm_leaves_no_leak():
+    a, pool = _pool(max_loaded=2)
+    for step in range(300):
+        aid = step % 5
+        ver = 1 + step // 50            # versions advance over the storm
+        pool.require(aid, ver)
+        dt = pool.take_load_time(in_use=set())
+        assert dt >= 0.0
+        a.check_invariants()
+        assert a.adapter_leak == 0
+        assert len(pool.resident) <= 2
+    assert pool.loads > 0 and pool.evictions > 0
+    pool.evict_all()
+    assert a.adapter_chunks == 0 and a.adapter_leak == 0
+    a.check_invariants()
+
+
+def test_pool_version_swap_evicts_old_version_first():
+    a, pool = _pool()
+    pool.require(7, 1)
+    pool.take_load_time(set())
+    chunks_v1 = a.adapter_chunks
+    pool.require(7, 2)
+    pool.take_load_time(set())
+    assert pool.resident == {7: 2}      # upgraded, not duplicated
+    assert a.adapter_chunks == chunks_v1
+    assert pool.evictions == 1 and a.adapter_leak == 0
+
+
+def test_pool_in_use_adapters_survive_pressure():
+    a, pool = _pool(max_loaded=1)
+    pool.require(1, 1)
+    pool.take_load_time(set())
+    pool.require(2, 1)
+    # adapter 1 is pinned by an active request: the load of 2 must not
+    # evict it, so it fails over to base instead
+    pool.take_load_time(in_use={1})
+    assert 1 in pool.resident
+    assert 2 not in pool.resident
+    assert pool.load_failures == 1
+    assert a.adapter_leak == 0
+
+
+def test_adapter_bytes_scales_with_rank():
+    b16 = adapter_bytes(LLAMA, 16)
+    b32 = adapter_bytes(LLAMA, 32)
+    assert b16 > 0 and abs(b32 / b16 - 2.0) < 1e-6
+
+
+def test_adapter_load_time_deterministic_and_linear():
+    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=11)
+    t1 = cm.adapter_load_time(1e9)
+    assert t1 == cm.adapter_load_time(1e9)       # no noise term
+    assert cm.adapter_load_time(2e9) > t1
+
+
+# -------------------------------------------- adapters-off bit-identity --
+# Pinned from the PR 7 build (commit 9b1b2e4) before any adapter code
+# landed: ClusterConfig.adapters=None must not move a single bit in any
+# prefill mode.
+PIN = {
+    "chained": dict(offered=249, routed=249, rejected=0, completed=249,
+                    attained=197, goodput=3.286891438,
+                    ttft_p99=5.916483059, tpot_p99=0.035959351,
+                    ft_iterations=19.227188082, n_decisions=11,
+                    final_fleet=1),
+    "pooled": dict(offered=249, routed=249, rejected=0, completed=249,
+                   attained=249, goodput=4.1544973,
+                   ttft_p99=3.205206383, tpot_p99=0.035863741,
+                   ft_iterations=18.726256983, n_decisions=22,
+                   final_fleet=1),
+    "chunked": dict(offered=249, routed=249, rejected=0, completed=249,
+                    attained=170, goodput=2.836403779,
+                    ttft_p99=10.099020867, tpot_p99=0.037004436,
+                    ft_iterations=31.756052142, n_decisions=22,
+                    final_fleet=5),
+}
+
+
+@pytest.mark.parametrize("mode", ("chained", "pooled", "chunked"))
+def test_adapters_off_bit_identical_to_pr7(mode):
+    cluster = ClusterConfig(
+        n_initial=2, autoscale=True, prefill_mode=mode,
+        prefill=PrefillPoolConfig(n_workers=2) if mode == "pooled"
+        else None)
+    res = ExperimentSpec(name=f"pin_{mode}", scenario="spike",
+                         duration_s=30.0, mean_rps=6.0, seed=3,
+                         sim=SimConfig(mode="harli", seed=3),
+                         cluster=cluster).run()
+    st = res.stats
+    got = dict(offered=st.offered, routed=st.routed, rejected=st.rejected,
+               completed=st.completed, attained=st.attained,
+               goodput=round(st.goodput, 9),
+               ttft_p99=round(st.ttft_p99, 9),
+               tpot_p99=round(st.tpot_p99, 9),
+               ft_iterations=round(res.ft_iterations, 9),
+               n_decisions=len(res.decisions),
+               final_fleet=res.final_fleet)
+    assert got == PIN[mode]
+    assert res.adapter_loads == 0 and res.adapter_versions_published == 0
+
+
+# -------------------------------------------------- end-to-end serving --
+def _mt_spec(continuous=True, seed=3, policy="affinity_packed",
+             n_tenants=4):
+    weights = (0.4, 0.3, 0.2, 0.1)[:n_tenants]
+    tenants = tuple(TenantConfig(name=f"t{i}", weight=w)
+                    for i, w in enumerate(weights))
+    return ExperimentSpec(
+        name="mt", scenario="multi_tenant", duration_s=30.0,
+        mean_rps=6.0, seed=seed, tenants=tenants,
+        sim=SimConfig(mode="harli", seed=seed),
+        cluster=ClusterConfig(
+            n_initial=2, autoscale=True, prefill_mode="chained",
+            prefill=None,
+            adapters=AdapterServingConfig(publish_every_iters=1.0,
+                                          continuous=continuous,
+                                          policy=policy)))
+
+
+def test_multi_tenant_serving_end_to_end():
+    res = _mt_spec().run()
+    s = res.stats
+    assert s.completed > 0
+    assert s.routed + s.rejected == s.offered
+    # every tenant got traffic and per-tenant accounting sums to fleet
+    assert set(s.tenants) == {0, 1, 2, 3}
+    assert sum(t.offered for t in s.tenants.values()) == s.offered
+    assert sum(t.completed for t in s.tenants.values()) == s.completed
+    # skewed weights show up in the mix
+    assert s.tenants[0].offered > s.tenants[3].offered
+    # the loop actually closed: versions published, hot-loaded, served
+    assert res.adapter_versions_published > 4   # beyond the v1 seeding
+    assert res.adapter_loads > 0
+    assert res.adapter_load_time_s > 0.0
+    assert all(t.versions_served >= 1 for t in s.tenants.values())
+
+
+def test_multi_tenant_deterministic():
+    r1, r2 = _mt_spec().run(), _mt_spec().run()
+    assert r1.stats == r2.stats
+    assert r1.adapter_loads == r2.adapter_loads
+    assert r1.adapter_versions_published == r2.adapter_versions_published
+
+
+def test_replicate_hot_policy_runs_and_conserves():
+    res = _mt_spec(policy="replicate_hot").run()
+    s = res.stats
+    assert s.routed + s.rejected == s.offered
+    assert s.completed > 0 and res.adapter_loads > 0
+
+
+# ------------------------------------------------- acceptance property --
+def test_continuous_deployment_beats_static_baseline():
+    """The PR's acceptance pin: harli continuous deployment sustains
+    per-tenant TTFT/TPOT SLO attainment >= the static-adapter baseline
+    while serving strictly more adapter versions — freshness is free
+    because swaps are priced, affinity-placed, and charged against
+    headroom the admission path already respects."""
+    cont = _mt_spec(continuous=True).run()
+    stat = _mt_spec(continuous=False).run()
+    # strictly more versions reach production
+    assert cont.adapter_versions_published > stat.adapter_versions_published
+    assert cont.adapter_versions_served > stat.adapter_versions_served
+    # at SLO attainment no worse, fleet-wide and per tenant
+    assert cont.stats.attained >= stat.stats.attained
+    for tid, tn in cont.stats.tenants.items():
+        st = stat.stats.tenants[tid]
+        assert tn.ttft_attainment >= st.ttft_attainment - 1e-9
+        assert tn.tpot_attainment >= st.tpot_attainment - 1e-9
+    # static really is static: exactly one version per tenant
+    assert stat.adapter_versions_published == len(stat.stats.tenants)
+
+
+def test_per_tenant_slo_overrides_flow_into_attainment():
+    spec = _mt_spec()
+    # tenant 0 gets an impossible TTFT SLO: its attainment must crater
+    # while the others (fleet default) are untouched by the override
+    tight = dataclasses.replace(spec.tenants[0], ttft_slo_s=1e-6)
+    spec = dataclasses.replace(spec,
+                               tenants=(tight,) + spec.tenants[1:])
+    res = spec.run()
+    base = _mt_spec().run()
+    assert res.stats.tenants[0].ttft_attainment == 0.0
+    assert res.stats.tenants[1].ttft_attainment == \
+        base.stats.tenants[1].ttft_attainment
+
+
+# ------------------------------------------------------------- spec v2 --
+def test_spec_v2_round_trip_with_adapters():
+    spec = _mt_spec()
+    j = spec.to_json()
+    assert json.loads(j)["schema_version"] == SCHEMA_VERSION
+    rt = ExperimentSpec.from_json(j)
+    assert rt == spec
+    rt.validate()
+
+
+def test_spec_v1_upgrades_cleanly_in_one_place():
+    v1 = {"name": "old", "scenario": "spike", "duration_s": 10.0,
+          "mean_rps": 4.0, "seed": 7}
+    up = ExperimentSpec.from_dict(dict(v1))
+    assert up.schema_version == SCHEMA_VERSION
+    assert up.tenants == () and up.cluster.adapters is None
+    up.validate()
+    # upgrade_v1 is the single documented migration point
+    assert upgrade_v1(dict(v1, schema_version=1)) == v1
+    # and a v1 doc behaves exactly like its explicit-v2 rewrite
+    assert up == ExperimentSpec.from_dict(dict(v1, schema_version=2))
+
+
+def test_spec_v1_rejects_smuggled_v2_blocks():
+    with pytest.raises(SpecError, match="v2-only"):
+        ExperimentSpec.from_dict({"tenants": []})
+    with pytest.raises(SpecError, match="cluster.adapters"):
+        ExperimentSpec.from_dict(
+            {"cluster": {"adapters": {"rank": 8}}})
+
+
+def test_spec_unknown_version_errors_listing_supported():
+    with pytest.raises(SpecError, match=r"supported versions: 1.*2"):
+        ExperimentSpec.from_dict({"schema_version": 3})
+    with pytest.raises(SpecError, match="unsupported schema_version"):
+        ExperimentSpec.from_dict({"schema_version": "two"})
+
+
+def test_spec_v2_validation_catches_adapter_contradictions():
+    # adapters without tenant traffic
+    with pytest.raises(SpecError, match="no tenant traffic"):
+        ExperimentSpec(cluster=ClusterConfig(
+            adapters=AdapterServingConfig())).validate()
+    # bad tenant weight
+    with pytest.raises(SpecError, match="weight must be > 0"):
+        dataclasses.replace(
+            _mt_spec(),
+            tenants=(TenantConfig(weight=0.0),)).validate()
+    # bad SLO override
+    with pytest.raises(SpecError, match="ttft_slo_s"):
+        dataclasses.replace(
+            _mt_spec(),
+            tenants=(TenantConfig(ttft_slo_s=-1.0),)).validate()
+    # unknown adapter placement policy, scoped to its kind
+    bad = _mt_spec()
+    bad = dataclasses.replace(bad, cluster=dataclasses.replace(
+        bad.cluster, adapters=AdapterServingConfig(policy="nope")))
+    with pytest.raises(SpecError, match="adapter_placement"):
+        bad.validate()
+    # bad publish cadence
+    bad2 = _mt_spec()
+    bad2 = dataclasses.replace(bad2, cluster=dataclasses.replace(
+        bad2.cluster,
+        adapters=AdapterServingConfig(publish_every_iters=0.0)))
+    with pytest.raises(SpecError, match="publish_every_iters"):
+        bad2.validate()
+
+
+def test_shipped_multi_tenant_spec_validates_and_runs():
+    spec = ExperimentSpec.load("examples/specs/multi_tenant_adapters.json")
+    spec.validate()
+    assert spec.schema_version == SCHEMA_VERSION
+    assert spec.cluster.adapters is not None and spec.tenants
+    res = dataclasses.replace(spec, duration_s=10.0, mean_rps=4.0).run()
+    assert res.stats.completed > 0

@@ -43,6 +43,8 @@ def test_registry_lists_builtins():
         "chained", "pooled", "chunked"}
     assert set(available_policies("scaling")) == {
         "decode_fleet", "pooled_prefill", "chunked_budget"}
+    assert set(available_policies("adapter_placement")) == {
+        "affinity_packed", "replicate_hot"}
 
 
 def test_registry_unknown_name_error_text():
@@ -55,6 +57,27 @@ def test_registry_unknown_name_error_text():
     assert "least_loaded" in msg and "cache_aware" in msg
     with pytest.raises(PolicyNotFoundError):
         resolve_policy("prefill", "pool")
+
+
+def test_registry_suggestions_scoped_to_requested_kind():
+    """The suggestion list names only the requested kind's policies —
+    an adapter_placement typo must not suggest routing or scaling names
+    (and vice versa), or the 'fix in the message' points at a name that
+    cannot resolve for that kind."""
+    with pytest.raises(PolicyNotFoundError) as ei:
+        resolve_policy("adapter_placement", "affinity_packd")
+    msg = str(ei.value)
+    assert "unknown adapter_placement policy" in msg
+    assert "affinity_packed" in msg and "replicate_hot" in msg
+    for other_kind_name in ("least_loaded", "chained", "decode_fleet",
+                            "kv_headroom"):
+        assert other_kind_name not in msg
+    with pytest.raises(PolicyNotFoundError) as ei:
+        resolve_policy("scaling", "affinity_packed")
+    msg = str(ei.value)
+    assert "decode_fleet" in msg and "replicate_hot" not in msg
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        resolve_policy("adapters", "affinity_packed")
 
 
 def test_registry_rejects_duplicate_name():
@@ -248,20 +271,42 @@ def test_legacy_kwargs_bit_identical_to_spec(mode, policy):
         [(d.t, d.action, d.target) for d in via_kwargs.decisions]
 
 
+@pytest.mark.legacy
 def test_legacy_router_pool_kwarg_still_constructs():
     """ClusterRouter(prefill_pool=...) (the PR 3 calling convention) still
-    builds the pooled placement, and router.pool still reads it."""
+    builds the pooled placement, and router.pool still reads it — now
+    under a DeprecationWarning pointing at the registry/spec path."""
     from repro.core.costmodel import CostModel, InstanceSpec
     from repro.core.prefill_pool import PrefillPool
     from repro.core.router import ClusterRouter
     cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=7)
     pool = PrefillPool(PrefillPoolConfig(), cm)
-    r = ClusterRouter(RouterConfig(), cm, prefill_pool=pool)
+    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
+        r = ClusterRouter(RouterConfig(), cm, prefill_pool=pool)
     assert r.mode == "pooled" and r.pool is pool
     chain = ClusterRouter(RouterConfig(), cm)
     assert chain.mode == "chained" and chain.pool is None
     with pytest.raises(AssertionError):
-        ClusterRouter(RouterConfig(), cm, prefill_pool=pool, mode="chained")
+        with pytest.warns(DeprecationWarning):
+            ClusterRouter(RouterConfig(), cm, prefill_pool=pool,
+                          mode="chained")
+
+
+@pytest.mark.legacy
+def test_legacy_policy_tuples_warn_but_match_builtins():
+    """router.POLICIES / PREFILL_MODES still resolve (bit-identical
+    contents) but raise DeprecationWarning naming the registry
+    replacement; both are slated for removal at the next re-anchor."""
+    import repro.core.router as router_mod
+    with pytest.warns(DeprecationWarning, match="available_policies"):
+        policies = router_mod.POLICIES
+    assert policies == ("least_loaded", "round_robin", "random",
+                        "predicted_latency", "session_affinity")
+    with pytest.warns(DeprecationWarning, match="re-anchor"):
+        modes = router_mod.PREFILL_MODES
+    assert modes == ("chained", "pooled", "chunked")
+    with pytest.raises(AttributeError):
+        router_mod.NOT_A_THING
 
 
 # --------------------------------------------- heterogeneous overrides --

@@ -17,7 +17,7 @@ from repro.core.cluster import ClusterConfig, ClusterSim, simulate_cluster
 from repro.core.costmodel import CostModel, InstanceSpec
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
-from repro.core.router import POLICIES, RouterConfig
+from repro.core.router import RouterConfig
 from repro.core.simulator import (ChunkedPrefillConfig, DecodeInstanceSim,
                                   SimConfig, fit_predictor)
 from repro.serving.trace import generate_scenario
@@ -40,7 +40,9 @@ def _run(cluster, scenario="spike", duration=20.0, rps=8.0, sessions=0,
 
 
 # ------------------------------------------------------------ chunked mode --
-@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("policy", ("least_loaded", "round_robin",
+                                    "random", "predicted_latency",
+                                    "session_affinity"))
 def test_chunked_conservation_per_policy(policy):
     """Every request routed exactly once or rejected, with the prefill
     stage living on the decode instances themselves."""
