@@ -946,6 +946,167 @@ def cluster_adapter_serving(duration_s: float = 90.0):
     _row("cluster_adapter_serving.png", 0, path)
 
 
+# Beyond-paper: fleet-scale cache-aware routing from gossiped digests
+# (core/gossip.py + core/policies/cache_aware_gossip.py) on the
+# shared_prefix scenario, where sessions in the same group share a
+# 384-token system prompt that only the cross-session radix tree
+# (core/prefix_tree.py) can serve across sessions. Panel A sweeps fleet
+# size at fixed per-instance load with three arms:
+#   sync          — cache_aware, which peeks every instance's cache
+#                   synchronously on each dispatch (O(fleet) peeks)
+#   gossip        — cache_aware_gossip, scoring from staleness-bounded
+#                   digests alone: zero synchronous peeks at dispatch
+#   session-keyed — cache_aware with cross_session=False, the PR 4
+#                   behaviour (no sharing between sessions)
+# Acceptance (pinned in tests/test_prefix_gossip.py): at fleet >= 32
+# gossip's TTFT p99 stays within 10% of sync with dispatch_peeks == 0,
+# and beats session-keyed on TTFT p99 at equal goodput. Panel B holds
+# the fleet at 16 and sweeps the gossip period with the staleness bound
+# at 2x the period: as digests age toward the bound the hit-probability
+# discount shrinks the credited prefix, so hit rate and tail latency
+# degrade gracefully rather than routing on stale claims.
+def cluster_prefix_gossip(duration_s: float = 60.0):
+    import dataclasses
+    import os
+
+    from repro.core.api import ExperimentSpec
+    from repro.core.cluster import ClusterConfig
+    from repro.core.gossip import GossipConfig
+    from repro.core.prefix_cache import PrefixCacheConfig
+    from repro.core.router import RouterConfig
+
+    fleets = (8, 16, 32) if duration_s < 60 else (8, 16, 32, 64)
+    rps_per_inst = 2.5
+
+    def run_one(size, policy, cross, gossip):
+        return ExperimentSpec(
+            name=f"cluster_prefix_gossip_{policy}_{size}",
+            scenario="shared_prefix", duration_s=duration_s,
+            mean_rps=rps_per_inst * size, n_sessions=4 * size, seed=7,
+            sim=SimConfig(mode="harli", seed=9),
+            cluster=ClusterConfig(
+                n_initial=size, autoscale=False, prefill_mode="chained",
+                prefix_cache=PrefixCacheConfig(chunks=16,
+                                               cross_session=cross),
+                gossip=gossip,
+                router=RouterConfig(policy=policy))).run()
+
+    arms = (("sync", "cache_aware", True, None),
+            ("gossip", "cache_aware_gossip", True, GossipConfig()),
+            ("session-keyed", "cache_aware", False, None))
+    out = {}
+    for size in fleets:
+        for arm, policy, cross, gossip in arms:
+            t0 = time.time()
+            res = run_one(size, policy, cross, gossip)
+            out[(arm, size)] = res
+            s = res.stats
+            tot = max(res.prefix_hits + res.prefix_misses, 1)
+            _row(f"cluster_prefix_gossip,{arm},fleet{size}",
+                 (time.time() - t0) * 1e6,
+                 f"ttft_p99={s.ttft_p99:.3f}|goodput={s.goodput:.2f}"
+                 f"|attain={s.slo_attainment:.3f}"
+                 f"|hit_rate={res.prefix_hits/tot:.3f}"
+                 f"|shared_tokens={res.prefix_shared_hit_tokens}"
+                 f"|peeks={res.dispatch_peeks}"
+                 f"|digests={res.gossip_published}"
+                 f"|digest_bytes={res.gossip_bytes}"
+                 f"|stale_discards={res.gossip_stale_discards}")
+    big = max(f for f in fleets if f >= 32)
+    g, sy = out[("gossip", big)], out[("sync", big)]
+    sk = out[("session-keyed", big)]
+    _row(f"cluster_prefix_gossip.summary,fleet{big}", 0,
+         f"gossip_vs_sync_ttft_p99="
+         f"{g.stats.ttft_p99/max(sy.stats.ttft_p99, 1e-9):.2f}x"
+         f"|gossip_vs_sessionkeyed_ttft_p99="
+         f"{g.stats.ttft_p99/max(sk.stats.ttft_p99, 1e-9):.2f}x"
+         f"|goodput_ratio="
+         f"{g.stats.goodput/max(sk.stats.goodput, 1e-9):.2f}x"
+         f"|sync_peeks={sy.dispatch_peeks}|gossip_peeks={g.dispatch_peeks}"
+         f"|win={int(g.dispatch_peeks == 0 and g.stats.ttft_p99 <= 1.1 * sy.stats.ttft_p99 and g.stats.ttft_p99 < sk.stats.ttft_p99 and g.stats.goodput >= 0.99 * sk.stats.goodput)}")
+
+    periods = (0.5, 1.0, 2.0, 4.0, 8.0)
+    psize = 16
+    pout = {}
+    for period in periods:
+        t0 = time.time()
+        res = run_one(psize, "cache_aware_gossip", True,
+                      GossipConfig(period_s=period,
+                                   staleness_bound_s=2.0 * period))
+        pout[period] = res
+        s = res.stats
+        tot = max(res.prefix_hits + res.prefix_misses, 1)
+        _row(f"cluster_prefix_gossip,period{period:g}",
+             (time.time() - t0) * 1e6,
+             f"ttft_p99={s.ttft_p99:.3f}|goodput={s.goodput:.2f}"
+             f"|hit_rate={res.prefix_hits/tot:.3f}"
+             f"|stale_discards={res.gossip_stale_discards}"
+             f"|max_used_age={res.gossip_max_used_age:.2f}")
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        _row("cluster_prefix_gossip.png", 0, "skipped_no_matplotlib")
+        return
+
+    C = {"sync": "#2a78d6", "gossip": "#1baf7a",
+         "session-keyed": "#eb6834", "ink": "#0b0b0b", "ink2": "#52514e",
+         "grid": "#e4e3df", "surface": "#fcfcfb", "slo": "#b3261e"}
+    fig, axes = plt.subplots(1, 3, figsize=(10.8, 3.3),
+                             facecolor=C["surface"])
+    panels = [("TTFT p99 (s)", lambda r: r.stats.ttft_p99),
+              ("prefix-cache hit rate", lambda r: r.prefix_hits / max(
+                  r.prefix_hits + r.prefix_misses, 1))]
+    for ax, (title, get) in zip(axes[:2], panels):
+        for arm, _, _, _ in arms:
+            ax.plot(fleets, [get(out[(arm, f)]) for f in fleets],
+                    marker="o", ms=3.5, lw=1.4, color=C[arm], label=arm)
+        ax.set_title(title, fontsize=9.5, color=C["ink"])
+        ax.set_xlabel("fleet size (instances)", fontsize=8.5,
+                      color=C["ink2"])
+        ax.set_xscale("log", base=2)
+        ax.set_xticks(fleets)
+        ax.set_xticklabels([str(f) for f in fleets])
+    ax = axes[2]
+    ax.plot(periods, [pout[p].prefix_hits / max(
+        pout[p].prefix_hits + pout[p].prefix_misses, 1)
+        for p in periods], marker="o", ms=3.5, lw=1.4,
+        color=C["gossip"], label="hit rate")
+    ax.set_title(f"hit rate vs gossip period (fleet {psize},\n"
+                 "staleness bound = 2x period)", fontsize=9.5,
+                 color=C["ink"])
+    ax.set_xlabel("gossip period (s)", fontsize=8.5, color=C["ink2"])
+    ax2 = ax.twinx()
+    ax2.plot(periods, [pout[p].stats.ttft_p99 for p in periods],
+             marker="s", ms=3.5, lw=1.4, ls="--", color=C["slo"],
+             label="TTFT p99 (s)")
+    ax2.tick_params(labelsize=8, colors=C["slo"])
+    h1, l1 = ax.get_legend_handles_labels()
+    h2, l2 = ax2.get_legend_handles_labels()
+    ax.legend(h1 + h2, l1 + l2, fontsize=8, frameon=False)
+    for a in list(axes):
+        a.set_facecolor(C["surface"])
+        a.grid(color=C["grid"], lw=0.6)
+        a.set_axisbelow(True)
+        a.tick_params(labelsize=8, colors=C["ink2"])
+        for sp in a.spines.values():
+            sp.set_color(C["grid"])
+    axes[0].legend(fontsize=8, frameon=False)
+    fig.suptitle("Fleet-scale prefix sharing: gossiped digests vs "
+                 "synchronous peeks vs session-keyed caching "
+                 "(shared_prefix scenario, chained prefill)",
+                 fontsize=10.5, color=C["ink"])
+    fig.tight_layout()
+    out_dir = os.path.join(os.path.dirname(__file__), "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "cluster_prefix_gossip.png")
+    fig.savefig(path, dpi=150, facecolor=C["surface"])
+    plt.close(fig)
+    _row("cluster_prefix_gossip.png", 0, path)
+
+
 ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig04_decode_utilization, fig05_colocation_potential,
        fig08_solo_latency, fig09_quantum_scaling, fig10_colo_latency,
@@ -953,4 +1114,4 @@ ALL = [fig01_phase_throughput, fig03_trace_batchsize,
        fig14_scheduler_timeline, sec87_tp_mode, sec88_overhead,
        cluster_goodput, cluster_fleet_timeline, cluster_prefill_modes,
        cluster_cache_aware, cluster_churn, cluster_survivability,
-       cluster_adapter_serving]
+       cluster_adapter_serving, cluster_prefix_gossip]

@@ -37,7 +37,8 @@ def main() -> None:
                        "cluster_cache_aware": 40.0,
                        "cluster_churn": 40.0,
                        "cluster_survivability": 40.0,
-                       "cluster_adapter_serving": 40.0}
+                       "cluster_adapter_serving": 40.0,
+                       "cluster_prefix_gossip": 40.0}
     for fn in F.ALL:
         if args.only and args.only not in fn.__name__:
             continue

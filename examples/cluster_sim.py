@@ -7,7 +7,7 @@ throughput), QoS attainment and finetune throughput.
         [--scenario spike] [--duration 60] [--rps 10] [--instances 2] \
         [--policy predicted_latency] [--prefill-mode pooled] \
         [--prefill-workers 2] [--chunk-budget 256] [--sessions 32] \
-        [--prefix-cache-chunks 16] [--no-autoscale] \
+        [--prefix-cache-chunks 16] [--gossip-period 2] [--no-autoscale] \
         [--churn-rate 2 --churn-warning 5 --migration-bw 8 --ladder] \
         [--tenants 4 --adapters --adapter-policy affinity_packed]
 
@@ -37,7 +37,12 @@ including plugins like ``cache_aware`` — via the control-plane registry.
 With ``--sessions > 0`` every serving instance gets a session prefix
 cache, so cache-aware routing (``session_affinity`` / ``cache_aware``)
 shortens effective prefill on hits; ``--prefix-cache-chunks 0`` disables
-it (the PR 3 cache-less baseline).
+it (the PR 3 cache-less baseline). The cache is a cross-session radix
+tree, so requests sharing a system prompt (``--scenario
+shared_prefix``) hit each other's entries. ``--gossip-period`` turns on
+the asynchronous cache-summary plane (``--gossip-staleness`` /
+``--gossip-topk`` tune it) and ``--policy cache_aware_gossip`` routes
+from those digests alone — zero synchronous cache peeks at dispatch.
 
 ``--tenants N`` splits the trace across N tenants (skewed harmonic
 weights) with per-tenant attainment reporting; adding ``--adapters``
@@ -56,6 +61,7 @@ from repro.core.api import (ExperimentSpec, SpecError, available_policies,
 from repro.core.autoscaler import AutoscalerConfig
 from repro.core.cluster import (ClusterConfig, DegradationConfig,
                                 KVMigrationConfig)
+from repro.core.gossip import GossipConfig
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
 from repro.core.router import RouterConfig
@@ -116,6 +122,30 @@ def build_spec(args, ap) -> ExperimentSpec:
         fuse_quantum=args.fuse_quantum)
     cache = PrefixCacheConfig(chunks=args.prefix_cache_chunks) \
         if n_sessions > 0 and args.prefix_cache_chunks > 0 else None
+    if args.gossip_period is None:
+        for flag, val in (("--gossip-staleness", args.gossip_staleness),
+                          ("--gossip-topk", args.gossip_topk)):
+            if val is not None:
+                ap.error(f"{flag} only applies with --gossip-period "
+                         "(the gossip plane is off without a publish "
+                         "cadence)")
+        # cache_aware_gossip cannot route without digests, so the policy
+        # alone turns the plane on at its defaults
+        gossip = GossipConfig() \
+            if args.policy == "cache_aware_gossip" else None
+    else:
+        if cache is None:
+            ap.error("--gossip-period needs a per-instance prefix cache "
+                     "(--prefix-cache-chunks >= 1 with sessions); there "
+                     "is nothing to gossip without one")
+        base = GossipConfig()
+        gossip = GossipConfig(
+            period_s=args.gossip_period,
+            staleness_bound_s=args.gossip_staleness
+            if args.gossip_staleness is not None
+            else 5.0 * args.gossip_period,
+            top_k=args.gossip_topk
+            if args.gossip_topk is not None else base.top_k)
     if args.churn_rate is None or args.churn_rate <= 0:
         for flag, val in (("--churn-warning", args.churn_warning),
                           ("--churn-checkpoint-interval",
@@ -213,6 +243,7 @@ def build_spec(args, ap) -> ExperimentSpec:
             prefill=prefill,
             chunked=chunked,
             prefix_cache=cache,
+            gossip=gossip,
             failures=failures,
             migration=migration,
             degradation=degradation,
@@ -280,6 +311,17 @@ def main():
     ap.add_argument("--prefix-cache-chunks", type=int, default=None,
                     help="per-instance session prefix cache capacity in "
                          "allocator chunks; 0 disables the cache")
+    ap.add_argument("--gossip-period", type=float, default=None,
+                    help="cache-digest publish cadence in seconds; turns "
+                         "on the gossip plane (cache_aware_gossip turns "
+                         "it on by itself at the defaults)")
+    ap.add_argument("--gossip-staleness", type=float, default=None,
+                    help="digest staleness bound in seconds (default "
+                         "5x the period; requires --gossip-period)")
+    ap.add_argument("--gossip-topk", type=int, default=None,
+                    help="prefix fingerprints per digest (default 8, "
+                         "clamped by the digest byte budget; requires "
+                         "--gossip-period)")
     ap.add_argument("--inf", default=None)
     ap.add_argument("--ft", default=None)
     ap.add_argument("--qos-ms", type=float, default=None)
@@ -348,6 +390,9 @@ def main():
                                           "prefill_workers",
                                           "prefill_ordering",
                                           "chunk_budget",
+                                          "gossip_period",
+                                          "gossip_staleness",
+                                          "gossip_topk",
                                           "churn_rate",
                                           "churn_warning",
                                           "churn_checkpoint_interval",
@@ -388,6 +433,10 @@ def main():
     cl = spec.cluster
     cache = cl.prefix_cache
     churn = ""
+    if cl.gossip is not None:
+        churn += f"  gossip={cl.gossip.period_s:g}s/" \
+                 f"{cl.gossip.staleness_bound_s:g}s" \
+                 f"(k={cl.gossip.effective_top_k()})"
     if cl.failures is not None:
         churn = f"  churn={cl.failures.rate_per_min:g}/min"
         if cl.failures.warning_s > 0:
@@ -457,7 +506,14 @@ def main():
         if cache is not None:
             tot = res.prefix_hits + res.prefix_misses
             print(f"{'':9s} prefix-cache: {res.prefix_hits}/{tot} hits, "
-                  f"{res.prefix_hit_tokens} prefill tokens saved")
+                  f"{res.prefix_hit_tokens} prefill tokens saved "
+                  f"({res.prefix_shared_hit_tokens} cross-session)")
+        if cl.gossip is not None:
+            print(f"{'':9s} gossip: {res.gossip_published} digests "
+                  f"({res.gossip_bytes}B) published, "
+                  f"{res.dispatch_peeks} sync peeks at dispatch, "
+                  f"{res.gossip_stale_discards} stale discards, "
+                  f"max used age {res.gossip_max_used_age:.1f}s")
         if cl.adapters is not None:
             print(f"{'':9s} adapters: {res.adapter_loads} hot-loads "
                   f"({res.adapter_evictions} evicted, "

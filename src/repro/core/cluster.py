@@ -60,6 +60,7 @@ from repro.core.allocator import BLOCK_BYTES
 from repro.core.autoscaler import (Autoscaler, AutoscalerConfig,
                                    InstanceSnapshot, ScaleDecision)
 from repro.core.costmodel import CostModel, InstanceSpec
+from repro.core.gossip import GossipConfig, GossipPlane
 from repro.core.prefill_pool import PrefillPoolConfig
 from repro.core.prefix_cache import PrefixCacheConfig
 from repro.core.router import ClusterRouter, ClusterStats, RouterConfig
@@ -150,6 +151,11 @@ class ClusterConfig:
         default_factory=ChunkedPrefillConfig)
     # per-instance session prefix cache; None = cache-less (PR 3 behaviour)
     prefix_cache: Optional[PrefixCacheConfig] = None
+    # asynchronous cache-summary gossip plane (core/gossip.py): each
+    # instance's prefix tree publishes staleness-bounded digests the
+    # cache_aware_gossip policy routes on. None (default) = no plane,
+    # bit-identical to the gossip-less behaviour
+    gossip: Optional[GossipConfig] = None
     # heterogeneous-fleet hook: entry i replaces SimConfig fields for the
     # i-th spawned instance (by spawn order; autoscaler spawns past the
     # list use the base SimConfig). Keys are validated by ExperimentSpec.
@@ -206,6 +212,13 @@ class ClusterResult:
     prefix_hits: int = 0
     prefix_misses: int = 0
     prefix_hit_tokens: int = 0
+    # cross-session sharing + gossip plane (ClusterConfig.gossip)
+    prefix_shared_hit_tokens: int = 0  # hit tokens from cross-session reuse
+    dispatch_peeks: int = 0          # synchronous cache probes at dispatch
+    gossip_published: int = 0        # digests published fleet-wide
+    gossip_bytes: int = 0            # total digest wire bytes
+    gossip_stale_discards: int = 0   # reads refused past the staleness bound
+    gossip_max_used_age: float = 0.0  # oldest digest age actually acted on
     # failure layer (ClusterConfig.failures)
     failures: int = 0                # hard kills applied (instances+workers)
     preemptions: int = 0             # graceful-drain warnings issued
@@ -279,6 +292,12 @@ class ClusterSim:
             predictor=self.predictor, placement=self.placement,
             adapter_policy=adapter_policy,
             adapter_registry=self.adapter_registry)
+        # ---- cache-summary gossip plane (ClusterConfig.gossip) ----------
+        self.gossip_plane: Optional[GossipPlane] = None
+        self._next_gossip_pub: Dict[int, float] = {}
+        if cluster.gossip is not None:
+            self.gossip_plane = GossipPlane(cluster.gossip)
+            self.router.gossip = self.gossip_plane
         self.autoscaler = Autoscaler(cluster.autoscaler)
         self.autoscaler.prefill_ttft_slo_s = rcfg.ttft_slo_s
         self._next_id = 0
@@ -452,6 +471,8 @@ class ClusterSim:
                 if inst.drained:
                     self.router.retire(inst.inst_id)
             self.placement.retire(self, epoch_end)
+            if self.gossip_plane is not None:
+                self._gossip_tick(epoch_end)
             if self.adapter_registry is not None \
                     and cl.adapters.continuous:
                 self._publish_tick(epoch_end)
@@ -490,6 +511,24 @@ class ClusterSim:
         self._retry_heap = []
         self.router.check_conservation()
         return self._result(duration)
+
+    def _gossip_tick(self, t: float) -> None:
+        """Gossip pump: each serving instance with a prefix cache
+        publishes a fresh digest when its per-instance period elapses
+        (first publish on the first epoch after spawn). Iteration is in
+        instance-id order, so the plane's state — and every routing
+        decision read from it — is deterministic per seed."""
+        plane = self.gossip_plane
+        period = plane.cfg.period_s
+        for iid in sorted(self.router.instances):
+            inst = self.router.instances[iid]
+            if inst.prefix_cache is None or not inst.serves_inference \
+                    or inst.role == "finetune":
+                continue
+            due = self._next_gossip_pub.get(iid, 0.0)
+            if t + 1e-9 >= due:
+                plane.publish(iid, t, inst.prefix_cache.tree)
+                self._next_gossip_pub[iid] = t + period
 
     def _publish_tick(self, t: float) -> None:
         """Continuous deployment: the fleet's finetune iterations train
@@ -732,6 +771,11 @@ class ClusterSim:
         lost, ft_lost = inst.kill(now)
         self._ft_lost_iterations += ft_lost
         self.router.kill_instance(iid)
+        if self.gossip_plane is not None:
+            # the dead cache's advertisement must not keep attracting
+            # traffic until the staleness bound expires
+            self.gossip_plane.drop(iid)
+            self._next_gossip_pub.pop(iid, None)
         self._failures += 1
         if not lost:
             return
@@ -829,11 +873,19 @@ class ClusterSim:
                 res.prefix_hits += inst.prefix_cache.stats.hits
                 res.prefix_misses += inst.prefix_cache.stats.misses
                 res.prefix_hit_tokens += inst.prefix_cache.stats.hit_tokens
+                res.prefix_shared_hit_tokens += \
+                    inst.prefix_cache.stats.shared_hit_tokens
             if inst.adapters is not None:
                 res.adapter_loads += inst.adapters.loads
                 res.adapter_evictions += inst.adapters.evictions
                 res.adapter_load_failures += inst.adapters.load_failures
                 res.adapter_load_time_s += inst.adapters.load_time_total_s
+        res.dispatch_peeks = self.router.dispatch_peeks
+        if self.gossip_plane is not None:
+            res.gossip_published = self.gossip_plane.published
+            res.gossip_bytes = self.gossip_plane.bytes_published
+            res.gossip_stale_discards = self.gossip_plane.stale_discards
+            res.gossip_max_used_age = self.gossip_plane.max_used_age
         if self.adapter_registry is not None:
             res.adapter_versions_published = \
                 self.adapter_registry.versions_published

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from repro.configs import get_config
 from repro.core import api
+from repro.core import gossip as gossip_mod
 from repro.core.adapters import TenantConfig
 from repro.core.cluster import (ClusterConfig, ClusterResult,
                                 DegradationConfig, simulate_cluster)
@@ -109,15 +110,19 @@ def upgrade_v1(data: Dict) -> Dict:
     """THE v1 -> v2 schema upgrade — the single place version migration
     happens (``from_dict`` routes every v1 document here).
 
-    v2 added the multi-LoRA serving blocks: top-level ``tenants`` and
-    ``cluster.adapters``. A v1 document (``schema_version`` absent or 1)
-    predates both, so the upgrade is: reject documents that smuggle v2
-    blocks without declaring the version, then fill the v2 defaults (no
-    tenants, no adapter serving) — semantics unchanged by construction."""
+    v2 added the multi-LoRA serving blocks (top-level ``tenants``,
+    ``cluster.adapters``) and later the cache-gossip plane
+    (``cluster.gossip``). A v1 document (``schema_version`` absent or 1)
+    predates all of them, so the upgrade is: reject documents that
+    smuggle v2 blocks without declaring the version, then fill the v2
+    defaults (no tenants, no adapter serving, no gossip) — semantics
+    unchanged by construction."""
     v2_only = [k for k in ("tenants",) if k in data]
     cl = data.get("cluster")
-    if isinstance(cl, dict) and cl.get("adapters") is not None:
-        v2_only.append("cluster.adapters")
+    if isinstance(cl, dict):
+        for blk in ("adapters", "gossip"):
+            if cl.get(blk) is not None:
+                v2_only.append(f"cluster.{blk}")
     if v2_only:
         raise SpecError(
             f"v1 spec uses v2-only block(s) {', '.join(v2_only)} — "
@@ -222,16 +227,46 @@ class ExperimentSpec:
                 "mode; drop them (CLI: --chunk-budget / --fuse-quantum "
                 "only apply to --prefill-mode chunked)")
         if cl.prefix_cache is not None and self.n_sessions == 0 \
-                and self.scenario != "session_heavy":
-            # session_heavy defaults its own sessions on; any other
-            # sessionless trace would make the cache pure cost — it
-            # reserves real allocator capacity (shrinking the finetune
-            # window and KV budget) and can never hit
+                and self.scenario not in ("session_heavy", "shared_prefix"):
+            # session_heavy/shared_prefix default their own sessions on;
+            # any other sessionless trace would make the cache pure cost
+            # — it reserves real allocator capacity (shrinking the
+            # finetune window and KV budget) and can never hit
             raise SpecError(
                 "prefix_cache configured but the trace is sessionless "
-                "(n_sessions=0) — the session-keyed cache would reserve "
+                "(n_sessions=0) — the prefix cache would reserve "
                 "allocator capacity and never hit; set n_sessions > 0 "
                 "or drop prefix_cache")
+        if cl.gossip is not None:
+            g = cl.gossip
+            if cl.prefix_cache is None:
+                raise SpecError(
+                    "cluster.gossip configured but prefix_cache is null — "
+                    "the gossip plane publishes prefix-cache digests; "
+                    "configure cluster.prefix_cache or drop gossip "
+                    "(gossip: null)")
+            if g.period_s <= 0:
+                raise SpecError("cluster.gossip.period_s must be > 0")
+            if g.staleness_bound_s < g.period_s:
+                raise SpecError(
+                    "cluster.gossip.staleness_bound_s must be >= period_s "
+                    "— a bound under the publish period would discard "
+                    "every digest before its refresh arrives (got "
+                    f"period={g.period_s}, bound={g.staleness_bound_s})")
+            if g.top_k < 1:
+                raise SpecError("cluster.gossip.top_k must be >= 1")
+            if g.effective_top_k() < 1:
+                raise SpecError(
+                    f"cluster.gossip.max_bytes={g.max_bytes} cannot fit "
+                    "even one digest entry (header "
+                    f"{gossip_mod.DIGEST_HEADER_BYTES} + entry "
+                    f"{gossip_mod.DIGEST_ENTRY_BYTES} bytes); raise "
+                    "max_bytes")
+        if cl.router.policy == "cache_aware_gossip" and cl.gossip is None:
+            raise SpecError(
+                "router.policy 'cache_aware_gossip' needs the gossip "
+                "plane — configure cluster.gossip (it never falls back "
+                "to synchronous cache peeks)")
         if cl.failures is not None:
             f = cl.failures
             if f.rate_per_min < 0 or f.warning_s < 0 or f.start_s < 0 \

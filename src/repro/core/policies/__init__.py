@@ -6,6 +6,9 @@ Importing this package registers every built-in policy:
                  session_affinity (core/policies/routing.py)
   * routing    — cache_aware, the registry's proof-of-API plugin
                  (core/policies/cache_aware.py, docs/api.md walkthrough)
+  * routing    — cache_aware_gossip, the fleet-scale variant scoring
+                 gossiped cache digests with zero synchronous peeks
+                 (core/policies/cache_aware_gossip.py, core/gossip.py)
   * prefill    — chained / pooled / chunked deployment modes
                  (core/policies/placement.py)
   * scaling    — decode_fleet / pooled_prefill / chunked_budget autoscaler
@@ -22,6 +25,7 @@ never needs to import it explicitly; third-party policies just call
 
 from repro.core.policies import adapter_placement  # noqa: F401
 from repro.core.policies import cache_aware  # noqa: F401
+from repro.core.policies import cache_aware_gossip  # noqa: F401
 from repro.core.policies import migration  # noqa: F401
 from repro.core.policies import placement  # noqa: F401
 from repro.core.policies import routing  # noqa: F401

@@ -69,13 +69,20 @@ class CacheAwareRouting(RoutingPolicy):
         if req is None or req.session_id < 0:
             return least_loaded(cand)
         cm = router.prefill_cm
-        per_queued = WAIT_WEIGHT * cm.prefill_latency(req.prompt_len)
+        # effective_prompt_len semantics: migrated KV needs no prefill
+        # anywhere and the cache lookup at dispatch is bounded the same
+        # way (router.credit_prefix), so a cross-session tree hit is
+        # never double-credited on top of a migration credit
+        eff = max(req.prompt_len - req.migrated_tokens, 1)
+        per_queued = WAIT_WEIGHT * cm.prefill_latency(eff)
 
         def score(inst):
             hit = 0
             if inst.prefix_cache is not None:
-                hit = inst.prefix_cache.peek(req.session_id, req.prompt_len)
-            remaining = cm.prefill_latency(max(req.prompt_len - hit, 1))
+                router.dispatch_peeks += 1
+                hit = inst.prefix_cache.peek(req.session_id, eff,
+                                             segments=req.prefix_segments)
+            remaining = cm.prefill_latency(max(eff - hit, 1))
             # ties (e.g. nothing cached anywhere) break like least_loaded
             return (remaining + inst.queue_depth * per_queued,
                     inst.load(), inst.inst_id)

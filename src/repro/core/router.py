@@ -38,7 +38,11 @@ built-in routing policies and their semantics:
     ``affinity_overflow_load``
   * ``cache_aware``        — route to whichever instance's ``PrefixCache``
     holds the longest matching prefix for the session, not just the sticky
-    one (core/policies/cache_aware.py — the registry's worked example)
+    one (core/policies/cache_aware.py — the registry's worked example).
+    Pays one synchronous cache peek per candidate per dispatch.
+  * ``cache_aware_gossip`` — the fleet-scale variant: scores candidates
+    from gossiped, staleness-bounded cache digests (core/gossip.py) with
+    zero synchronous peeks on the dispatch path
 
 Session prefix cache (core/prefix_cache.py): when the chosen instance holds
 the request's session prefix, ``credit_prefix`` shortens the effective
@@ -57,7 +61,6 @@ instance — never dropped, never duplicated.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -70,28 +73,6 @@ from repro.core.predictor import TwoStageLatencyPredictor
 from repro.core.prefill_pool import PrefillPool
 from repro.core.simulator import DecodeInstanceSim
 from repro.serving.request import Request
-
-# Deprecated legacy tuples of the built-in names (PR-5 shims). Importing
-# ``POLICIES`` / ``PREFILL_MODES`` warns via the module __getattr__ below:
-# the registry (api.available_policies) is authoritative and additionally
-# lists plugins such as ``cache_aware``. Slated for removal at the next
-# re-anchor.
-_LEGACY_POLICIES = ("least_loaded", "round_robin", "random",
-                    "predicted_latency", "session_affinity")
-_LEGACY_PREFILL_MODES = ("chained", "pooled", "chunked")
-
-
-def __getattr__(name: str):
-    if name in ("POLICIES", "PREFILL_MODES"):
-        warnings.warn(
-            f"repro.core.router.{name} is deprecated; use "
-            f"repro.core.api.available_policies("
-            f"{'routing' if name == 'POLICIES' else 'prefill'!r}) — "
-            f"the tuple is slated for removal at the next re-anchor",
-            DeprecationWarning, stacklevel=2)
-        return _LEGACY_POLICIES if name == "POLICIES" \
-            else _LEGACY_PREFILL_MODES
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -195,15 +176,12 @@ class ClusterRouter:
     instances may be added, put into draining, or have their role flipped
     between control periods; the router re-reads eligibility on every
     dispatch. The routing policy and the prefill placement are policy
-    objects resolved through the registry; the legacy keyword form
-    (``prefill_pool=``/``mode=``) still constructs the matching placement
-    and stays bit-identical.
+    objects resolved through the registry; ``placement=None`` defaults to
+    the ``chained`` placement (serialized per-instance prefill).
     """
 
     def __init__(self, cfg: RouterConfig, prefill_cm: CostModel,
-                 prefill_pool: Optional[PrefillPool] = None,
                  predictor: Optional[TwoStageLatencyPredictor] = None,
-                 mode: Optional[str] = None,
                  placement: Optional[api.PrefillPlacement] = None,
                  adapter_policy: Optional[api.AdapterPlacement] = None,
                  adapter_registry: Optional[AdapterRegistry] = None):
@@ -213,26 +191,7 @@ class ClusterRouter:
         self.policy: api.RoutingPolicy = \
             api.resolve_policy("routing", cfg.policy)(cfg)
         if placement is None:
-            # deprecation shim: derive the placement from the legacy
-            # (prefill_pool, mode) keywords exactly as before — slated
-            # for removal at the next re-anchor
-            if prefill_pool is not None or mode is not None:
-                warnings.warn(
-                    "ClusterRouter(prefill_pool=/mode=) is deprecated; "
-                    "construct a PrefillPlacement via "
-                    "api.resolve_policy('prefill', ...) and pass "
-                    "placement=, or drive the run from an ExperimentSpec "
-                    "— the legacy keywords are slated for removal at the "
-                    "next re-anchor", DeprecationWarning, stacklevel=2)
-            if mode is None:
-                mode = "pooled" if prefill_pool is not None else "chained"
-            assert (mode == "pooled") == (prefill_pool is not None), \
-                "prefill pool supplied iff mode is 'pooled'"
-            cls = api.resolve_policy("prefill", mode)
-            placement = cls(prefill_pool) if mode == "pooled" else cls()
-        else:
-            assert prefill_pool is None and mode in (None, placement.name), \
-                "pass either a placement object or the legacy keywords"
+            placement = api.resolve_policy("prefill", "chained")()
         self.placement = placement
         self.mode = placement.name
         # multi-LoRA serving (core/adapters.py): when set, adapter-carrying
@@ -240,6 +199,16 @@ class ClusterRouter:
         # with the registry's newest published version at dispatch
         self.adapter_policy = adapter_policy
         self.adapter_registry = adapter_registry
+        # fleet-scale cache routing (core/gossip.py): the cluster layer
+        # attaches the gossip plane when ``cluster.gossip`` is configured;
+        # ``clock`` mirrors the simulation time of the last dispatch so
+        # policies can age digests without a ``now`` parameter, and
+        # ``dispatch_peeks`` counts synchronous cache probes made on the
+        # dispatch path (cache_aware pays O(fleet) of them per request;
+        # cache_aware_gossip must stay at zero — tested)
+        self.gossip = None
+        self.clock = 0.0
+        self.dispatch_peeks = 0
         self.instances: Dict[int, DecodeInstanceSim] = {}
         self.retired: Dict[int, DecodeInstanceSim] = {}
         self.routed: List[RoutedRequest] = []
@@ -298,6 +267,7 @@ class ClusterRouter:
         The caller must already have detached the requests from the dead
         instance (``DecodeInstanceSim.kill``/``recall``), so deleting the
         stale assignment here keeps exactly-once accounting intact."""
+        self.clock = max(self.clock, now)
         n = 0
         for req in sorted(reqs, key=lambda r: (r.arrival, r.rid)):
             rr = self._routed_ix[req.rid]
@@ -400,12 +370,16 @@ class ClusterRouter:
 
     # --------------------------------------------------------- dispatch --
     def credit_prefix(self, inst: DecodeInstanceSim, req: Request) -> None:
-        """Consult the chosen instance's session prefix cache and shorten
-        the request's effective prefill by the cached prefix. Must run
-        before any prefill latency is charged."""
+        """Consult the chosen instance's prefix cache and shorten the
+        request's effective prefill by the cached prefix. Must run before
+        any prefill latency is charged. The lookup is bounded by the
+        tokens still needing prefill (prompt minus migrated KV) so a
+        cache hit is never double-credited on top of a migration credit
+        — ``effective_prompt_len`` stays >= 1 by construction."""
         if inst.prefix_cache is not None and req.session_id >= 0:
+            avail = req.prompt_len - req.migrated_tokens
             req.cache_hit_tokens = inst.prefix_cache.lookup(
-                req.session_id, req.prompt_len)
+                req.session_id, avail, segments=req.prefix_segments)
 
     def dispatch(self, req: Request, now: float) -> int:
         """Admit one request and hand it to the prefill placement.
@@ -413,6 +387,7 @@ class ClusterRouter:
         entered a prefill stage, or REJECTED (-1) under global
         saturation. Exactly-once by construction."""
         assert req.rid not in self._assigned, "request routed twice"
+        self.clock = max(self.clock, now)
         if self.adapter_registry is not None and req.adapter_id >= 0:
             # continuous deployment: serve whatever version the finetune
             # side has published by now (static baselines only ever see
@@ -454,6 +429,7 @@ class ClusterRouter:
         prefill to a decode instance chosen by the routing policy (at
         hand-off time, so the decision sees current fleet state). Returns
         the number of requests handed to the decode stage."""
+        self.clock = max(self.clock, until)
         return self.placement.pump(until, self)
 
     def dispatch_decode(self, req: Request, ready: float) -> int:

@@ -740,9 +740,11 @@ class DecodeInstanceSim:
             # token_times as the churn TPOT penalty
             self.active.append(r)
             if self.prefix_cache is not None and r.session_id >= 0:
-                # the prompt KV is resident from here on: later requests of
-                # this session routed here skip prefill for the prefix
-                self.prefix_cache.insert(r.session_id, r.prompt_len)
+                # the prompt KV is resident from here on: later requests
+                # sharing any leading segment (same session, or a shared
+                # system prompt) routed here skip prefill for the prefix
+                self.prefix_cache.insert(r.session_id, r.prompt_len,
+                                         segments=r.prefix_segments)
 
     def step(self, until: float) -> float:
         """Advance the instance clock by ONE event (an idle fast-forward, a

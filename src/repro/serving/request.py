@@ -4,7 +4,13 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Tuple
+
+# Segment-id namespaces for Request.prefix_segments. The ids only need to
+# be collision-free across namespaces; bases live here (not in
+# core/prefix_tree.py) because serving must not import core.
+GROUP_SEG_BASE = 1_000_000_000      # shared system-prompt / template groups
+SESSION_SEG_BASE = 2_000_000_000    # per-session prompt remainders
 
 
 class Phase(enum.Enum):
@@ -23,6 +29,12 @@ class Request:
     # sticky-routing key (-1 = sessionless): requests sharing a session
     # benefit from prefix-cache reuse when routed to the same instance
     session_id: int = -1
+    # symbolic prompt structure for cross-session prefix sharing
+    # (core/prefix_tree.py): ordered (segment_id, n_tokens) runs summing
+    # to prompt_len. Empty = opaque prompt, cached session-keyed only.
+    # Survives reset_for_retry — it is prompt identity, not placement
+    # state.
+    prefix_segments: Tuple[Tuple[int, int], ...] = ()
     # tokens of the prompt already resident in the target instance's prefix
     # cache (core/prefix_cache.py): they need no prefill compute
     cache_hit_tokens: int = 0

@@ -16,7 +16,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.request import Request
+from repro.serving.request import (GROUP_SEG_BASE, SESSION_SEG_BASE,
+                                   Request)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,14 @@ class TraceConfig:
     # adapter_id -1). Tenant draws use their own RNG stream (like session
     # ids) so enabling tenants never perturbs an existing seed's trace.
     tenant_weights: Tuple[float, ...] = ()
+    # cross-session shared prompt prefixes (core/prefix_tree.py): each
+    # session belongs to one of ``shared_prefix_groups`` groups whose
+    # requests open with the same ``shared_prefix_tokens``-token system
+    # prompt, expressed as Request.prefix_segments. 0 groups = disabled.
+    # Group assignment uses its own RNG stream (like sessions/tenants) so
+    # enabling it never perturbs an existing seed's trace.
+    shared_prefix_groups: int = 0
+    shared_prefix_tokens: int = 0
     seed: int = 0
 
 
@@ -84,6 +93,23 @@ def generate(cfg: TraceConfig = TraceConfig()) -> List[Request]:
         p = w / w.sum()
         for r in reqs:
             r.adapter_id = int(trng.choice(len(p), p=p))
+    if cfg.shared_prefix_groups > 0 and cfg.shared_prefix_tokens > 0 \
+            and cfg.n_sessions > 0:
+        grng = np.random.default_rng(cfg.seed + SHARED_PREFIX_SEED_SALT)
+        group_of = grng.integers(cfg.shared_prefix_groups,
+                                 size=cfg.n_sessions)
+        for r in reqs:
+            # the system prompt covers at most the cacheable prompt (the
+            # final token is never cached); too-short prompts stay opaque
+            sys_len = min(cfg.shared_prefix_tokens, r.prompt_len - 1)
+            rest = r.prompt_len - sys_len
+            if sys_len <= 0 or rest <= 0:
+                continue
+            g = int(group_of[r.session_id])
+            r.prefix_segments = (
+                (GROUP_SEG_BASE + g, sys_len),
+                (SESSION_SEG_BASE + r.session_id, rest),
+            )
     return reqs
 
 
@@ -94,6 +120,9 @@ FAILURE_SEED_SALT = 92821
 
 # Tenant-assignment stream salt (same isolation property as above).
 TENANT_SEED_SALT = 74093
+
+# Session->shared-prefix-group stream salt (same isolation property).
+SHARED_PREFIX_SEED_SALT = 48611
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,7 +199,7 @@ class FailureSchedule:
 # a flash crowd, agentic long-tail jobs, chatbot sessions with shared
 # prompt prefixes).
 SCENARIOS = ("steady", "diurnal", "spike", "heavy_tail", "session_heavy",
-             "multi_tenant")
+             "multi_tenant", "shared_prefix")
 
 # multi_tenant default arrival mix: a few hot tenants, a long-ish tail —
 # the regime adapter_placement policies must pack/replicate for.
@@ -208,6 +237,16 @@ def scenario_config(name: str, duration_s: float = 600.0,
         base["n_sessions"] = n_sessions if n_sessions > 0 else 12
         return TraceConfig(burstiness=0.8, rate_amplitude=0.1,
                            prompt_sigma=0.35, **base)
+    if name == "shared_prefix":
+        # session_heavy traffic where sessions additionally share a few
+        # long system prompts (per-tenant templates): the regime the
+        # cross-session radix tree + gossip routing targets. Many more
+        # sessions than session_heavy — single-session stickiness alone
+        # cannot keep the fleet warm, shared prefixes can.
+        base["n_sessions"] = n_sessions if n_sessions > 0 else 32
+        return TraceConfig(burstiness=0.8, rate_amplitude=0.1,
+                           prompt_sigma=0.35, shared_prefix_groups=4,
+                           shared_prefix_tokens=384, **base)
     if name == "multi_tenant":
         # MaaS adapter tenancy: several tenants' traffic multiplexed over
         # one fleet, skewed toward a few hot adapters; moderate bursts so

@@ -1,5 +1,5 @@
-"""Control-plane API (PR 5): policy registry, ExperimentSpec, back-compat
-shims, the cache_aware routing plugin and the fused finetune quantum.
+"""Control-plane API (PR 5): policy registry, ExperimentSpec, the
+cache_aware routing plugin and the fused finetune quantum.
 
 Covers: registry registration / unknown-name error text / duplicate
 rejection / end-to-end pluggability of a test-local policy;
@@ -9,7 +9,12 @@ pinning the legacy string-kwarg construction bit-identical to the
 spec-driven path for one scenario per prefill mode; heterogeneous
 per-instance overrides; cache_aware beating session_affinity on TTFT p99
 in the session_heavy scenario at equal goodput; and the fused-quantum
-flag raising finetune throughput inside the TPOT SLO (default off)."""
+flag raising finetune throughput inside the TPOT SLO (default off).
+
+The PR 9 deprecation shims (ClusterRouter prefill_pool=/mode= kwargs,
+router.POLICIES/PREFILL_MODES tuples) and their capture tests were
+removed in PR 10 at the scheduled re-anchor; the string-kwarg
+simulate_cluster path above is NOT deprecated and stays pinned."""
 
 import dataclasses
 import glob
@@ -269,44 +274,6 @@ def test_legacy_kwargs_bit_identical_to_spec(mode, policy):
     assert via_spec.chunk_budget_timeline == via_kwargs.chunk_budget_timeline
     assert [(d.t, d.action, d.target) for d in via_spec.decisions] == \
         [(d.t, d.action, d.target) for d in via_kwargs.decisions]
-
-
-@pytest.mark.legacy
-def test_legacy_router_pool_kwarg_still_constructs():
-    """ClusterRouter(prefill_pool=...) (the PR 3 calling convention) still
-    builds the pooled placement, and router.pool still reads it — now
-    under a DeprecationWarning pointing at the registry/spec path."""
-    from repro.core.costmodel import CostModel, InstanceSpec
-    from repro.core.prefill_pool import PrefillPool
-    from repro.core.router import ClusterRouter
-    cm = CostModel(LLAMA, InstanceSpec(tp=2), seed=7)
-    pool = PrefillPool(PrefillPoolConfig(), cm)
-    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
-        r = ClusterRouter(RouterConfig(), cm, prefill_pool=pool)
-    assert r.mode == "pooled" and r.pool is pool
-    chain = ClusterRouter(RouterConfig(), cm)
-    assert chain.mode == "chained" and chain.pool is None
-    with pytest.raises(AssertionError):
-        with pytest.warns(DeprecationWarning):
-            ClusterRouter(RouterConfig(), cm, prefill_pool=pool,
-                          mode="chained")
-
-
-@pytest.mark.legacy
-def test_legacy_policy_tuples_warn_but_match_builtins():
-    """router.POLICIES / PREFILL_MODES still resolve (bit-identical
-    contents) but raise DeprecationWarning naming the registry
-    replacement; both are slated for removal at the next re-anchor."""
-    import repro.core.router as router_mod
-    with pytest.warns(DeprecationWarning, match="available_policies"):
-        policies = router_mod.POLICIES
-    assert policies == ("least_loaded", "round_robin", "random",
-                        "predicted_latency", "session_affinity")
-    with pytest.warns(DeprecationWarning, match="re-anchor"):
-        modes = router_mod.PREFILL_MODES
-    assert modes == ("chained", "pooled", "chunked")
-    with pytest.raises(AttributeError):
-        router_mod.NOT_A_THING
 
 
 # --------------------------------------------- heterogeneous overrides --

@@ -1,0 +1,427 @@
+"""Cross-session radix prefix tree + gossiped cache summaries (PR 10).
+
+Covers: tree semantics (cross-session hits on shared leading segments,
+radix splits that preserve sibling branches, terminal-replace
+truncation, node-granular LRU eviction that keeps hot shared prefixes
+resident), bit-exact LRU equivalence with the PR 4 OrderedDict on
+session-keyed traffic under seeded churn, digest/fingerprint agreement
+between the cache side and the query side, the staleness-bound property
+(a digest at or past the bound is never used), allocator conservation
+under tree eviction churn in all three prefill modes, determinism of
+``cache_aware_gossip`` per seed, the gossip-plane-on-but-unread path
+staying bit-identical to gossip-off, and the PR's fleet-32 acceptance:
+gossip routing within 10% of synchronous ``cache_aware`` TTFT p99 with
+zero synchronous cache peeks at dispatch, beating session-keyed caching
+on TTFT p99 at equal goodput."""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.allocator import AllocatorConfig, UnifiedAllocator
+from repro.core.api import ExperimentSpec
+from repro.core.cluster import ClusterConfig, ClusterSim
+from repro.core.gossip import (DIGEST_ENTRY_BYTES, DIGEST_HEADER_BYTES,
+                               CacheDigest, GossipConfig, GossipPlane)
+from repro.core.prefill_pool import PrefillPoolConfig
+from repro.core.prefix_cache import PrefixCache, PrefixCacheConfig
+from repro.core.prefix_tree import (RadixPrefixTree, normalize_segments,
+                                    path_fingerprints, session_segments)
+from repro.core.router import RouterConfig
+from repro.core.simulator import SimConfig
+from repro.serving.trace import generate_scenario
+
+LLAMA = get_config("llama3-8b")
+
+G, S1, S2, S3 = 1_000_000_007, 2_000_000_001, 2_000_000_002, 2_000_000_003
+
+
+# ------------------------------------------------------------- tree core --
+def test_tree_cross_session_hit_on_shared_segment():
+    t = RadixPrefixTree(10_000)
+    t.insert(((G, 384), (S1, 200)))
+    # a *different* session sharing the leading segment hits it in full;
+    # nothing of the match lands on its own (terminal) run
+    total, final_run = t.match(((G, 384), (S2, 150)))
+    assert (total, final_run) == (384, 0)
+    # the owner matches both the shared segment and its own tail
+    total, final_run = t.match(((G, 384), (S1, 200)))
+    assert (total, final_run) == (584, 200)
+    # divergence mid-segment stops the walk at the shorter length
+    total, final_run = t.match(((G, 100),))
+    assert (total, final_run) == (100, 100)
+
+
+def test_tree_radix_split_preserves_sibling_branches():
+    t = RadixPrefixTree(10_000)
+    t.insert(((G, 384), (S1, 200)))
+    t.insert(((G, 384), (S2, 300)))          # splits nothing: same edge
+    assert t.match(((G, 384), (S1, 200))) == (584, 200)
+    # a shorter shared run splits the G edge; both session tails survive
+    t.insert(((G, 100), (S3, 50)))
+    assert t.match(((G, 384), (S1, 200))) == (584, 200)
+    assert t.match(((G, 384), (S2, 300))) == (684, 300)
+    assert t.match(((G, 100), (S3, 50))) == (150, 50)
+    t.check_invariants()
+
+
+def test_tree_terminal_replace_truncates():
+    t = RadixPrefixTree(10_000)
+    t.insert(session_segments(1, 100))
+    assert t.used_tokens == 100
+    t.insert(session_segments(1, 60))        # shorter re-insert truncates
+    assert t.used_tokens == 60
+    assert t.match(session_segments(1, 100)) == (60, 60)
+    t.insert(session_segments(1, 90))        # longer re-insert grows
+    assert t.used_tokens == 90
+    assert len(t) == 1, "an unbranched chain stays one node"
+    t.check_invariants()
+
+
+def test_tree_eviction_is_node_granular_and_keeps_hot_shared_prefix():
+    t = RadixPrefixTree(1000)
+    t.insert(((G, 400), (S1, 300)))
+    t.insert(((G, 400), (S2, 300)))
+    assert t.used_tokens == 1000 and len(t) == 3
+    # over capacity: the LRU *leaf* (S1's tail) goes, the shared G node
+    # — on every inserted path, hence most recently used — stays
+    t.insert(((G, 400), (S3, 300)))
+    assert t.used_tokens == 1000 and t.evicted_nodes == 1
+    assert t.match(((G, 400), (S1, 1)))[0] == 400   # shared part survives
+    assert t.match(((G, 400), (S1, 300))) == (400, 0)  # own tail gone
+    assert t.match(((G, 400), (S3, 300))) == (700, 300)
+    t.check_invariants()
+
+
+def test_tree_insert_clamps_oversized_path_to_capacity():
+    t = RadixPrefixTree(500)
+    t.insert(((G, 400), (S1, 300)))          # 700 tokens into 500
+    assert t.used_tokens == 500
+    assert t.match(((G, 400), (S1, 300))) == (500, 100)
+    t.check_invariants()
+
+
+def test_tree_invariants_under_seeded_churn():
+    rng = np.random.default_rng(5)
+    t = RadixPrefixTree(2000)
+    groups = [1_000_000_000 + i for i in range(3)]
+    for _ in range(400):
+        sid = 2_000_000_000 + int(rng.integers(12))
+        path = ((int(rng.choice(groups)), int(rng.integers(50, 400))),
+                (sid, int(rng.integers(1, 600))))
+        op = rng.integers(3)
+        if op == 0:
+            t.insert(path)
+        elif op == 1:
+            t.match(path)
+        else:
+            t.touch(path)
+        t.check_invariants()
+    assert t.evicted_nodes > 0, "churn never hit capacity"
+
+
+# ------------------------------------------- PR 4 LRU bit-equivalence --
+def _alloc(total_gb=8):
+    return UnifiedAllocator(AllocatorConfig(
+        total_bytes=total_gb * 2 ** 30, n_layers=32,
+        kv_bytes_per_token=131072, max_bs=64, qos_s=0.04,
+        swap_time_s=0.002))
+
+
+class _LegacyLRU:
+    """The PR 4 session-keyed OrderedDict cache, re-implemented as the
+    reference model: whole-entry eviction, pop-old/set-new on insert,
+    move_to_end on hit, min-hit floor, last token never covered."""
+
+    def __init__(self, capacity_tokens, min_hit_tokens):
+        self.cap = capacity_tokens
+        self.min_hit = min_hit_tokens
+        self.d = collections.OrderedDict()
+        self.evictions = 0
+
+    def insert(self, sid, tokens):
+        if self.cap <= 0 or tokens <= 0:
+            return
+        self.d.pop(sid, None)
+        self.d[sid] = min(tokens, self.cap)
+        while sum(self.d.values()) > self.cap:
+            self.d.popitem(last=False)
+            self.evictions += 1
+
+    def lookup(self, sid, prompt_len):
+        cached = self.d.get(sid, 0)
+        hit = min(cached, prompt_len - 1)
+        if hit < self.min_hit:
+            return 0
+        self.d.move_to_end(sid)
+        return hit
+
+    @property
+    def used(self):
+        return sum(self.d.values())
+
+
+def test_session_keyed_tree_bit_identical_to_legacy_lru():
+    """The engine swap is invisible to session-keyed traffic: a seeded
+    random op stream produces identical hits, evictions and occupancy on
+    the tree-backed cache and the PR 4 OrderedDict reference."""
+    alloc = _alloc()
+    cache = PrefixCache(PrefixCacheConfig(chunks=2, min_hit_tokens=32),
+                        alloc)
+    ref = _LegacyLRU(cache.capacity_tokens, 32)
+    rng = np.random.default_rng(11)
+    for step in range(600):
+        sid = int(rng.integers(10))
+        n = int(rng.integers(1, cache.capacity_tokens // 2))
+        if rng.integers(2) == 0:
+            cache.insert(sid, n)
+            ref.insert(sid, n)
+        else:
+            assert cache.lookup(sid, n) == ref.lookup(sid, n), step
+        assert cache.used_tokens == ref.used, step
+        assert cache.stats.evictions == ref.evictions, step
+        cache.check_invariants()
+    assert cache.stats.hits > 0 and cache.stats.evictions > 0
+    assert cache.stats.shared_hit_tokens == 0
+
+
+def test_cross_session_disabled_routes_segments_to_session_path():
+    """cross_session=False (the benchmark's no-sharing arm) ignores
+    prefix_segments entirely — two sessions with the same shared segment
+    cannot see each other's entries."""
+    cache = PrefixCache(PrefixCacheConfig(chunks=2, min_hit_tokens=8,
+                                          cross_session=False), _alloc())
+    segs1 = ((G, 384), (S1, 116))
+    segs2 = ((G, 384), (S2, 116))
+    cache.insert(1, 500, segments=segs1)
+    assert cache.lookup(2, 500, segments=segs2) == 0
+    assert cache.lookup(1, 500, segments=segs1) == 499
+    assert cache.stats.shared_hit_tokens == 0
+
+
+def test_shared_hit_tokens_split_cross_session_share():
+    cache = PrefixCache(PrefixCacheConfig(chunks=2, min_hit_tokens=8),
+                        _alloc())
+    cache.insert(1, 500, segments=((G, 384), (S1, 116)))
+    # another session: the whole hit is on the non-terminal shared run
+    assert cache.lookup(2, 500, segments=((G, 384), (S2, 116))) == 384
+    assert cache.stats.shared_hit_tokens == 384
+    # the owner: 499 total, 384 of it shared, the tail its own
+    assert cache.lookup(1, 500, segments=((G, 384), (S1, 116))) == 499
+    assert cache.stats.shared_hit_tokens == 384 + 384
+
+
+# ------------------------------------------------- digests & staleness --
+def test_digest_keys_match_query_fingerprints():
+    t = RadixPrefixTree(10_000)
+    t.insert(((G, 384), (S1, 200)))
+    t.insert(((G, 384), (S2, 100)))
+    want = dict(path_fingerprints(((G, 384), (S1, 200))))
+    entries = dict(t.digest(8))
+    fps = path_fingerprints(((G, 384), (S1, 200)))
+    (fp_g, cum_g), (fp_s1, cum_s1) = fps
+    assert entries[fp_g] == 384 and cum_g == 384
+    assert entries[fp_s1] == 584 and cum_s1 == 584
+    # heaviest first, deterministic
+    d = t.digest(8)
+    assert [c for _, c in d] == sorted((c for _, c in d), reverse=True)
+    assert t.digest(1) == (d[0],)
+    assert want  # fingerprints are stable across processes (FNV, not hash)
+
+
+def test_digest_collapses_same_segment_continuations():
+    """A radix split inside one segment must not change its digest key:
+    the collapsed path fingerprint and deepest token count survive."""
+    t = RadixPrefixTree(10_000)
+    t.insert(((G, 384),))
+    before = dict(t.digest(8))
+    t.insert(((G, 100), (S3, 50)))           # splits the G edge at 100
+    after = dict(t.digest(8))
+    (fp_g, _), = path_fingerprints(((G, 384),))
+    assert before[fp_g] == 384 and after[fp_g] == 384
+
+
+def test_effective_top_k_respects_byte_budget():
+    assert GossipConfig(top_k=100, max_bytes=60).effective_top_k() \
+        == (60 - DIGEST_HEADER_BYTES) // DIGEST_ENTRY_BYTES
+    assert GossipConfig(top_k=2, max_bytes=4096).effective_top_k() == 2
+    assert GossipConfig(max_bytes=DIGEST_HEADER_BYTES).effective_top_k() \
+        == 0
+
+
+def test_stale_digest_is_never_used():
+    """The staleness-bound property, swept over seeded probe times: a
+    digest at or past the bound reads as None (a cold cache), a younger
+    one is returned, and the discount decays linearly to 0 at the
+    bound."""
+    cfg = GossipConfig(period_s=1.0, staleness_bound_s=5.0)
+    plane = GossipPlane(cfg)
+    t = RadixPrefixTree(10_000)
+    t.insert(((G, 384), (S1, 200)))
+    d = plane.publish(3, now=10.0, tree=t)
+    assert isinstance(d, CacheDigest) and d.size_bytes <= cfg.max_bytes
+    rng = np.random.default_rng(3)
+    for now in 10.0 + rng.uniform(0.0, 12.0, size=200):
+        got = plane.get(3, float(now))
+        if now - 10.0 >= cfg.staleness_bound_s:
+            assert got is None
+        else:
+            assert got is d
+            assert 0.0 < plane.discount(got.age(float(now))) <= 1.0
+    assert plane.get(3, 15.0) is None            # exactly at the bound
+    assert plane.discount(5.0) == 0.0
+    assert plane.discount(0.0) == 1.0
+    assert plane.discount(2.5) == 0.5
+    assert plane.max_used_age < cfg.staleness_bound_s
+    assert plane.stale_discards > 0
+    plane.drop(3)
+    assert plane.get(3, 10.0) is None and len(plane) == 0
+
+
+# ------------------------------------------------------- cluster runs --
+def _spec(policy, size=2, cross=True, gossip=None, duration=25.0,
+          rps_per_inst=2.0, mode="chained", cache_chunks=16, seed=7):
+    prefill = PrefillPoolConfig(n_workers=2) if mode == "pooled" else None
+    return ExperimentSpec(
+        name=f"gossip_{policy}_{size}", scenario="shared_prefix",
+        duration_s=duration, mean_rps=rps_per_inst * size,
+        n_sessions=4 * size, seed=seed,
+        sim=SimConfig(mode="harli", seed=seed + 2),
+        cluster=ClusterConfig(
+            n_initial=size, autoscale=False, prefill_mode=mode,
+            prefill=prefill,
+            prefix_cache=PrefixCacheConfig(chunks=cache_chunks,
+                                           cross_session=cross),
+            gossip=gossip,
+            router=RouterConfig(policy=policy)))
+
+
+def test_cache_aware_gossip_deterministic_per_seed():
+    def go():
+        r = _spec("cache_aware_gossip", size=3,
+                  gossip=GossipConfig()).run()
+        return (r.stats, r.prefix_hits, r.prefix_hit_tokens,
+                r.prefix_shared_hit_tokens, r.gossip_published,
+                r.gossip_bytes, r.gossip_stale_discards,
+                r.gossip_max_used_age, r.dispatch_peeks)
+    assert go() == go()
+
+
+def test_gossip_plane_on_but_unread_is_bit_identical_to_off():
+    """Publishing digests is pure observation: with a policy that never
+    reads them (cache_aware), turning the plane on must not perturb a
+    single routing or simulation decision — the PR 9 behaviour is the
+    gossip-off path, bit-exact."""
+    off = _spec("cache_aware", size=3).run()
+    on = _spec("cache_aware", size=3, gossip=GossipConfig()).run()
+    assert on.stats == off.stats
+    assert on.prefix_hits == off.prefix_hits
+    assert on.prefix_hit_tokens == off.prefix_hit_tokens
+    assert on.gossip_published > 0 and off.gossip_published == 0
+
+
+@pytest.mark.parametrize("mode", ("chained", "pooled", "chunked"))
+def test_allocator_conservation_under_tree_eviction_churn(mode):
+    """A deliberately tiny cache (2 chunks) forces constant tree
+    eviction; whatever the tree does internally, the allocator's chunk
+    accounting and the tree's token accounting must both balance on
+    every instance, in every prefill mode."""
+    spec = _spec("cache_aware_gossip", size=2, gossip=GossipConfig(),
+                 mode=mode, cache_chunks=2, duration=20.0,
+                 rps_per_inst=3.0)
+    reqs = spec.requests()
+    cs = ClusterSim(LLAMA, LLAMA, spec.sim, spec.cluster)
+    cs.run(reqs, spec.duration_s)
+    churned = 0
+    for inst in cs.router.all_instances():
+        if inst.prefix_cache is None:
+            continue
+        inst.prefix_cache.check_invariants()
+        inst.alloc.check_invariants()
+        assert inst.alloc.prefix_chunks \
+            == inst.prefix_cache.granted_chunks
+        churned += inst.prefix_cache.stats.evictions
+    assert churned > 0, "cache never hit capacity — no churn exercised"
+
+
+def test_fleet32_gossip_acceptance():
+    """The PR's acceptance pin at fleet 32 on shared_prefix:
+
+      * cache_aware_gossip routes with ZERO synchronous cache peeks at
+        dispatch (the sync policy pays O(fleet) peeks per request) and
+        still lands TTFT p99 within 10% of synchronous cache_aware;
+      * it beats session-keyed caching (cross_session=False — no
+        sharing between sessions) on TTFT p99 at equal goodput, because
+        only the tree serves the group-shared system prompt across
+        sessions;
+      * every digest the router used was younger than the staleness
+        bound."""
+    size = 32
+    sync = _spec("cache_aware", size=size).run()
+    gos = _spec("cache_aware_gossip", size=size,
+                gossip=GossipConfig()).run()
+    sk = _spec("cache_aware", size=size, cross=False).run()
+    assert gos.dispatch_peeks == 0
+    assert sync.dispatch_peeks > 0 and sk.dispatch_peeks > 0
+    assert gos.gossip_published > 0 and gos.gossip_bytes > 0
+    assert gos.gossip_max_used_age < GossipConfig().staleness_bound_s
+    assert gos.prefix_shared_hit_tokens > 0
+    assert sk.prefix_shared_hit_tokens == 0
+    assert gos.stats.ttft_p99 <= 1.1 * sync.stats.ttft_p99, \
+        (gos.stats.ttft_p99, sync.stats.ttft_p99)
+    assert gos.stats.ttft_p99 < sk.stats.ttft_p99, \
+        (gos.stats.ttft_p99, sk.stats.ttft_p99)
+    assert gos.stats.goodput >= 0.99 * sk.stats.goodput
+
+
+def test_killed_instance_digest_is_dropped():
+    """A killed instance's cache is gone; its digest must leave the
+    plane with it, not advertise dead KV until the bound expires."""
+    spec = _spec("cache_aware_gossip", size=3, gossip=GossipConfig())
+    reqs = spec.requests()
+    cs = ClusterSim(LLAMA, LLAMA, spec.sim, spec.cluster)
+    cs.run(reqs, 10.0)
+    assert len(cs.gossip_plane) > 0
+    victim = sorted(cs.router.instances)[0]
+    cs._kill_instance(victim, 10.0)
+    assert cs.gossip_plane.get(victim, 10.0) is None
+
+
+def test_spec_v2_validation_catches_gossip_contradictions():
+    from repro.core.api import SpecError
+
+    def expect(**cl):
+        spec = ExperimentSpec(name="x", scenario="shared_prefix",
+                              duration_s=10, mean_rps=4, n_sessions=8,
+                              cluster=ClusterConfig(**cl))
+        with pytest.raises(SpecError):
+            spec.validate()
+
+    expect(gossip=GossipConfig())                   # plane without cache
+    expect(prefix_cache=PrefixCacheConfig(),        # bound < period
+           gossip=GossipConfig(period_s=5, staleness_bound_s=2))
+    expect(prefix_cache=PrefixCacheConfig(),        # 0-entry byte budget
+           gossip=GossipConfig(max_bytes=DIGEST_HEADER_BYTES))
+    expect(prefix_cache=PrefixCacheConfig(),        # policy needs plane
+           router=RouterConfig(policy="cache_aware_gossip"))
+    expect(prefix_cache=PrefixCacheConfig(),
+           gossip=GossipConfig(period_s=0))
+    # and the shipped spec + a valid in-memory combination both pass
+    _spec("cache_aware_gossip", gossip=GossipConfig()).validate()
+    ExperimentSpec.load(
+        "examples/specs/shared_prefix_gossip.json").validate()
+
+
+def test_shared_prefix_scenario_tags_segments():
+    reqs = generate_scenario("shared_prefix", 10.0, 8.0, seed=1,
+                             n_sessions=16)
+    tagged = [r for r in reqs if r.prefix_segments]
+    assert tagged, "shared_prefix produced no segment-tagged requests"
+    for r in tagged:
+        segs = normalize_segments(r.prefix_segments)
+        assert sum(n for _, n in segs) == r.prompt_len
+        assert segs[0][0] < 2_000_000_000 <= segs[-1][0]
+    groups = {r.prefix_segments[0][0] for r in tagged}
+    assert len(groups) == 4, "scenario defaults to 4 shared-prefix groups"
